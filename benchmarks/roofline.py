@@ -1,0 +1,77 @@
+"""Roofline report: aggregates the dry-run sweep into the 40-cell table.
+
+Reads ``experiments/dryrun/<mesh>/<arch>__<shape>.json`` (produced by
+``python -m repro.launch.dryrun --all``) and renders EXPERIMENTS.md
+§Roofline: the three terms, the bottleneck, MODEL_FLOPS/HLO ratio, and
+the modeled-bound MFU per cell.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+NAME = "roofline"
+DRYRUN_DIR = pathlib.Path("experiments/dryrun")
+
+
+def run(mesh: str = "single") -> dict:
+    rows = []
+    d = DRYRUN_DIR / mesh
+    if not d.exists():
+        return {"rows": [], "missing": True, "mesh": mesh}
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("skipped"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "skipped": rec["reason"][:40]})
+            continue
+        if not rec.get("ok"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "failed": True})
+            continue
+        r = rec["roofline"]
+        m = rec.get("memory", {})
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "compute_s": r["terms_s"]["compute"],
+            "memory_s": r["terms_s"]["memory"],
+            "collective_s": r["terms_s"]["collective"],
+            "bottleneck": r["bottleneck"],
+            "useful_ratio": r["useful_ratio"],
+            "mfu_bound": r["mfu_bound"],
+            "live_gb": m.get("peak_live_bytes", 0) / 1e9,
+            "fits": m.get("fits_16g_hbm"),
+        })
+    return {"rows": rows, "mesh": mesh, "missing": False}
+
+
+def format_table(res: dict) -> str:
+    if res.get("missing"):
+        return (f"roofline: no dry-run results under {DRYRUN_DIR}/"
+                f"{res['mesh']} — run `python -m repro.launch.dryrun --all`")
+    lines = [
+        f"Roofline terms per cell ({res['mesh']} mesh; seconds/step)",
+        f"  {'arch':22s}{'shape':13s}{'compute':>10s}{'memory':>10s}"
+        f"{'collect':>10s} {'bound':10s}{'useful':>7s}{'MFU@bound':>10s}"
+        f"{'liveGB':>8s}",
+    ]
+    for r in res["rows"]:
+        if r.get("skipped"):
+            lines.append(f"  {r['arch']:22s}{r['shape']:13s}  SKIP ({r['skipped']})")
+            continue
+        if r.get("failed"):
+            lines.append(f"  {r['arch']:22s}{r['shape']:13s}  FAILED")
+            continue
+        lines.append(
+            f"  {r['arch']:22s}{r['shape']:13s}{r['compute_s']:10.2e}"
+            f"{r['memory_s']:10.2e}{r['collective_s']:10.2e} "
+            f"{r['bottleneck']:10s}{r['useful_ratio']:7.2f}"
+            f"{r['mfu_bound']:10.3f}{r['live_gb']:8.1f}"
+            f"{'' if r['fits'] else '  OVER-HBM'}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(format_table(run("single")))
+    print()
+    print(format_table(run("multi")))

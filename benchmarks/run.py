@@ -1,0 +1,64 @@
+"""Benchmark aggregator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Runs one module per paper table/figure plus the kernel microbench and the
+roofline report, prints each, and writes JSON records to
+``experiments/bench/``.  ``--quick`` skips the training-based accuracy
+sweep (several CPU-minutes); ``--only <name>`` runs one module.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+OUT = pathlib.Path("experiments/bench")
+
+
+def _modules(quick: bool):
+    from . import (
+        accuracy_sweep,
+        kernel_bench,
+        roofline,
+        table1_goap_vs_sw,
+        table2_coo_overhead,
+        table3_accum_ratio,
+        table45_perf_model,
+    )
+
+    mods = [table1_goap_vs_sw, table2_coo_overhead, table3_accum_ratio,
+            table45_perf_model, kernel_bench, roofline]
+    if not quick:
+        mods.append(accuracy_sweep)
+    return mods
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for mod in _modules(args.quick):
+        if args.only and mod.NAME != args.only:
+            continue
+        print(f"\n=== {mod.NAME} " + "=" * max(0, 60 - len(mod.NAME)))
+        t0 = time.perf_counter()
+        try:
+            res = mod.run()
+            print(mod.format_table(res))
+            (OUT / f"{mod.NAME}.json").write_text(
+                json.dumps(res, indent=1, default=str))
+            print(f"[{mod.NAME}: {time.perf_counter() - t0:.1f}s]")
+        except Exception:
+            failures += 1
+            print(f"[{mod.NAME}: FAILED]\n{traceback.format_exc()}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

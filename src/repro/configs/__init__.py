@@ -1,0 +1,10 @@
+"""Assigned-architecture configs + shape registry."""
+
+from .registry import (
+    ARCH_IDS,
+    SHAPES,
+    get_config,
+    reduced_config,
+    all_cells,
+    cell_applicable,
+)

@@ -1,0 +1,98 @@
+"""Gated one-to-all product (GOAP) convolution (paper §III-C).
+
+Convention (matches paper Fig. 3): the input feature map is **pre-padded**,
+I: (IC, WI) binary; the kernel is (KW, IC, OC); valid convolution gives
+O: (OC, OI) with OI = WI - KW + 1, stride 1 (the paper's RF signals are 1-D,
+H = 1 everywhere).
+
+Three implementations, all equal to the dense oracle:
+
+* ``conv1d_dense_oracle``  — im2col matmul, the mathematical ground truth
+  and the sliding-window (SW) baseline compute.
+* ``goap_conv_nnz``        — vectorized weight-priority iteration: every
+  non-zero weight w@(oc, ic, ci) contributes ``w * I[ic, ci:ci+OI]`` to
+  output row oc (its *enable map*); gathered + segment-summed, jittable.
+* ``goap_conv_reference``  — literal Algorithm-1 numpy loop (tests only).
+
+``build_shift_buffer`` produces the binary shifted-input matrix
+X'(IC*KW, OI) with X'[ic*KW + ci, oi] = I[ic, oi + ci]; dense conv is then
+``W'(OC, IC*KW) @ X'`` which is the layout the TPU block-sparse kernel uses.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .sparse_format import CooKernel
+
+__all__ = [
+    "conv1d_dense_oracle",
+    "build_shift_buffer",
+    "goap_conv_nnz",
+    "goap_conv_reference",
+]
+
+
+def build_shift_buffer(ifm: jax.Array, kw: int) -> jax.Array:
+    """(IC, WI) -> X'(IC*KW, OI): row ic*KW+ci holds I[ic] shifted by ci."""
+    ic, wi = ifm.shape
+    oi = wi - kw + 1
+    if oi <= 0:
+        raise ValueError(f"input width {wi} < kernel width {kw}")
+    # windows[ci, oi] = I[:, oi + ci]
+    idx = jnp.arange(kw)[:, None] + jnp.arange(oi)[None, :]  # (KW, OI)
+    shifted = ifm[:, idx]  # (IC, KW, OI)
+    return shifted.reshape(ic * kw, oi)
+
+
+def conv1d_dense_oracle(ifm: jax.Array, kernel: jax.Array) -> jax.Array:
+    """Dense valid 1-D conv: (IC, WI) x (KW, IC, OC) -> (OC, OI)."""
+    kw, ic, oc = kernel.shape
+    x = build_shift_buffer(ifm, kw)                     # (IC*KW, OI)
+    w = jnp.transpose(kernel, (2, 1, 0)).reshape(oc, ic * kw)  # W'
+    return w @ x.astype(w.dtype)
+
+
+def goap_conv_nnz(ifm: jax.Array, coo: CooKernel) -> jax.Array:
+    """Vectorized GOAP: iterate non-zero weights, accumulate enable maps.
+
+    Faithful to the paper's dataflow: for each nnz weight, fetch its EM
+    (OI contiguous binary inputs starting at its kernel column) and add
+    ``w * EM`` into output row oc.  Gating by the binary input is the
+    multiplication by {0,1}.
+    """
+    kw = coo.kw
+    icn = coo.ic
+    _, wi = ifm.shape
+    oi = wi - kw + 1
+    if coo.nnz == 0:
+        return jnp.zeros((coo.oc, oi), dtype=jnp.result_type(jnp.float32))
+
+    w = jnp.asarray(coo.data, dtype=jnp.float32)        # (nnz,)
+    oc_idx = jnp.asarray(coo.row_idx // icn)            # (nnz,)
+    ic_idx = jnp.asarray(coo.row_idx % icn)             # (nnz,)
+    ci_idx = jnp.asarray(coo.col_idx)                   # (nnz,)
+
+    # EM gather: ems[n, oi] = I[ic_n, oi + ci_n]
+    cols = ci_idx[:, None] + jnp.arange(oi)[None, :]    # (nnz, OI)
+    ems = ifm[ic_idx[:, None], cols].astype(jnp.float32)
+    contrib = w[:, None] * ems                          # (nnz, OI)
+    return jax.ops.segment_sum(contrib, oc_idx, num_segments=coo.oc)
+
+
+def goap_conv_reference(ifm: np.ndarray, coo: CooKernel) -> np.ndarray:
+    """Literal Algorithm-1 loop (numpy; tests/small shapes only)."""
+    icn, wi = ifm.shape
+    oi = wi - coo.kw + 1
+    out = np.zeros((coo.oc, oi), dtype=np.float64)
+    for n in range(coo.nnz):
+        oc = int(coo.row_idx[n]) // icn
+        ic = int(coo.row_idx[n]) % icn
+        ci = int(coo.col_idx[n])
+        w = float(coo.data[n])
+        for o in range(oi):              # enable-map iteration
+            if ifm[ic, o + ci] != 0:     # temporal-sparsity gate
+                out[oc, o] += w
+    return out

@@ -1,0 +1,129 @@
+"""Leaky integrate-and-fire neuron dynamics (paper §IV-B, eq. (3)).
+
+Hardware convention (paper §III-C.2 / Algorithm 2): each iteration the PE
+loads the membrane potential, applies the decay factor alpha, accumulates
+the gated partial products, fires if the potential exceeds the threshold and
+*soft-resets by subtracting theta at fire time* before writing the state
+back.  (Eq. (3) subtracts theta*S_{t-1} after the decay instead; the two
+conventions differ only by an alpha scaling of theta, which is absorbed by
+the per-neuron trainable theta.)
+
+alpha, theta and U_th are trainable per neuron (paper: "treated as trainable
+parameters for each neuron").  alpha is parameterized through a sigmoid to
+stay in (0, 1); theta and U_th are stored raw.
+
+The spike nonlinearity is a Heaviside step with a fast-sigmoid surrogate
+gradient for BPTT training (straight-through style), the standard approach
+for SNN backprop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "LIFParams",
+    "init_lif_params",
+    "spike",
+    "lif_step",
+    "lif_unroll",
+]
+
+SURROGATE_SLOPE = 4.0  # k in 1 / (1 + k|u|)^2
+
+
+@jax.custom_vjp
+def spike(v_minus_th: jax.Array) -> jax.Array:
+    """Heaviside spike with fast-sigmoid surrogate gradient."""
+    return (v_minus_th > 0).astype(v_minus_th.dtype)
+
+
+def _spike_fwd(u):
+    return spike(u), u
+
+
+def _spike_bwd(u, g):
+    # d/du fast_sigmoid(u) = 1 / (1 + k*|u|)^2
+    surrogate = 1.0 / (1.0 + SURROGATE_SLOPE * jnp.abs(u)) ** 2
+    return (g * surrogate,)
+
+
+spike.defvjp(_spike_fwd, _spike_bwd)
+
+
+@dataclasses.dataclass
+class LIFParams:
+    """Per-neuron trainable LIF parameters (pytree)."""
+
+    alpha_logit: jax.Array  # sigmoid(alpha_logit) = decay in (0, 1)
+    theta: jax.Array        # soft-reset amount
+    v_th: jax.Array         # firing threshold
+
+    @property
+    def alpha(self) -> jax.Array:
+        return jax.nn.sigmoid(self.alpha_logit)
+
+
+jax.tree_util.register_pytree_node(
+    LIFParams,
+    lambda p: ((p.alpha_logit, p.theta, p.v_th), None),
+    lambda _, c: LIFParams(*c),
+)
+
+
+def init_lif_params(
+    shape: Tuple[int, ...],
+    alpha: float = 0.9,
+    theta: float = 1.0,
+    v_th: float = 1.0,
+    dtype=jnp.float32,
+) -> LIFParams:
+    alpha = float(jnp.clip(alpha, 1e-4, 1 - 1e-4))
+    logit = float(jnp.log(alpha / (1.0 - alpha)))
+    return LIFParams(
+        alpha_logit=jnp.full(shape, logit, dtype=dtype),
+        theta=jnp.full(shape, theta, dtype=dtype),
+        v_th=jnp.full(shape, v_th, dtype=dtype),
+    )
+
+
+def lif_step(
+    v: jax.Array, current: jax.Array, params: LIFParams
+) -> Tuple[jax.Array, jax.Array]:
+    """One LIF update (hardware write-back convention).
+
+    v_dec   = alpha * v
+    v_acc   = v_dec + current
+    s       = H(v_acc - v_th)
+    v_next  = v_acc - theta * s        (soft reset at fire time)
+
+    Returns (v_next, s).  Broadcasting: params may be per-neuron, per-channel
+    (broadcast over trailing dims) or scalar.
+    """
+    v_acc = params.alpha * v + current
+    s = spike(v_acc - params.v_th)
+    v_next = v_acc - params.theta * s
+    return v_next, s
+
+
+def lif_unroll(
+    currents: jax.Array, params: LIFParams, v0: jax.Array | None = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Run LIF over a leading time axis: currents (T, ...) -> spikes (T, ...).
+
+    Returns (spikes, final_v).  Uses lax.scan (sequential in T, vectorized in
+    the neuron dims) — the reference dynamics for training and for the fused
+    Pallas kernel oracle.
+    """
+    if v0 is None:
+        v0 = jnp.zeros(currents.shape[1:], dtype=currents.dtype)
+
+    def step(v, c):
+        v_next, s = lif_step(v, c, params)
+        return v_next, s
+
+    final_v, spikes = jax.lax.scan(step, v0, currents)
+    return spikes, final_v

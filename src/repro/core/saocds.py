@@ -1,0 +1,263 @@
+"""SAOCDS layer dataflow (paper §III-C.4, Algorithms 1-2).
+
+Two execution paths, proven equal in tests:
+
+* ``schedule_interpreter`` — the **faithful streaming emulator**: executes
+  the precomputed static schedule (compute / extra / empty iterations) one
+  iteration per ``lax.scan`` step, exactly as the accelerator pipeline does:
+  first-touch load+decay of each output channel's membrane row, enable-map
+  gated accumulation, fire + soft reset + emit on the channel's last
+  iteration.  Also returns iteration/accumulation counts (the quantities in
+  paper Tables I/III).
+
+* ``saocds_conv_step`` / ``saocds_conv_layer`` — the **fast vectorized
+  path** used for training and serving: decay-all -> GOAP accumulate ->
+  fire, mathematically identical because every output channel is decayed
+  exactly once per timestep (extra iterations guarantee this in hardware).
+
+FC layers use the weight-mask (WM) method (paper §III-B); max-pooling over
+binary spikes is a logical OR (max) over the window.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .goap import goap_conv_nnz, conv1d_dense_oracle
+from .lif import LIFParams, lif_step
+from .sparse_format import (
+    ITER_COMPUTE,
+    ITER_EXTRA,
+    CooKernel,
+    Schedule,
+    WeightMask,
+)
+
+__all__ = [
+    "pad_same",
+    "max_pool_spikes",
+    "saocds_conv_step",
+    "saocds_conv_layer",
+    "sw_conv_layer",
+    "wm_fc_step",
+    "wm_fc_layer",
+    "schedule_interpreter",
+]
+
+
+def pad_same(ifm: jax.Array, kw: int) -> jax.Array:
+    """Zero-pad (…, IC, W) so that valid conv with width kw keeps W."""
+    left = (kw - 1) // 2
+    right = kw - 1 - left
+    pad = [(0, 0)] * (ifm.ndim - 1) + [(left, right)]
+    return jnp.pad(ifm, pad)
+
+
+def max_pool_spikes(spikes: jax.Array, pool: int = 2) -> jax.Array:
+    """(…, C, W) -> (…, C, W//pool); max == logical OR for binary spikes."""
+    *lead, c, w = spikes.shape
+    w2 = (w // pool) * pool
+    x = spikes[..., :w2].reshape(*lead, c, w2 // pool, pool)
+    return x.max(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Fast vectorized path (training / serving).
+# ---------------------------------------------------------------------------
+
+def saocds_conv_step(
+    v: jax.Array,
+    ifm: jax.Array,
+    coo: CooKernel,
+    lif: LIFParams,
+) -> Tuple[jax.Array, jax.Array]:
+    """One timestep of a SAOCDS conv layer on a pre-padded binary IFM.
+
+    v: (OC, OI) membrane state; ifm: (IC, WI).  Returns (v_next, spikes).
+    """
+    current = goap_conv_nnz(ifm, coo)
+    return lif_step(v, current, lif)
+
+
+def saocds_conv_layer(
+    spikes_t: jax.Array,
+    coo: CooKernel,
+    lif: LIFParams,
+    v0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """(T, IC, WI) pre-padded binary frames -> (T, OC, OI) spikes."""
+    t, _, wi = spikes_t.shape
+    oi = wi - coo.kw + 1
+    if v0 is None:
+        v0 = jnp.zeros((coo.oc, oi), dtype=jnp.float32)
+
+    def step(v, ifm):
+        v_next, s = saocds_conv_step(v, ifm, coo, lif)
+        return v_next, s
+
+    v_final, out = jax.lax.scan(step, v0, spikes_t)
+    return out, v_final
+
+
+def sw_conv_layer(
+    spikes_t: jax.Array,
+    kernel: jax.Array,
+    lif: LIFParams,
+    v0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sliding-window (FINN-style dense) baseline conv layer, same dynamics."""
+    kw, _, oc = kernel.shape
+    t, _, wi = spikes_t.shape
+    oi = wi - kw + 1
+    if v0 is None:
+        v0 = jnp.zeros((oc, oi), dtype=jnp.float32)
+
+    def step(v, ifm):
+        current = conv1d_dense_oracle(ifm, kernel)
+        return lif_step(v, current, lif)
+
+    v_final, out = jax.lax.scan(step, v0, spikes_t)
+    return out, v_final
+
+
+def wm_fc_step(
+    v: jax.Array,
+    spikes: jax.Array,
+    weights: jax.Array,
+    lif: LIFParams,
+) -> Tuple[jax.Array, jax.Array]:
+    """One timestep of a weight-masked FC layer.
+
+    spikes: (IN,) binary; weights: (IN, OUT) with zeros already masked (the
+    1-bit weight mask is a fetch/storage optimization — numerically the
+    masked weight matrix is just the matrix with zeros kept).
+    """
+    current = spikes.astype(weights.dtype) @ weights
+    return lif_step(v, current, lif)
+
+
+def wm_fc_layer(
+    spikes_t: jax.Array,
+    wm: WeightMask | jax.Array,
+    lif: LIFParams,
+    v0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """(T, IN) -> (T, OUT) spikes through an FC + LIF layer."""
+    weights = jnp.asarray(wm.weights if isinstance(wm, WeightMask) else wm)
+    out_dim = weights.shape[1]
+    if v0 is None:
+        v0 = jnp.zeros((out_dim,), dtype=weights.dtype)
+
+    def step(v, s):
+        return wm_fc_step(v, s, weights, lif)
+
+    v_final, out = jax.lax.scan(step, v0, spikes_t)
+    return out, v_final
+
+
+# ---------------------------------------------------------------------------
+# Faithful streaming emulator (Algorithm 2).
+# ---------------------------------------------------------------------------
+
+def _first_touch_flags(sched: Schedule) -> np.ndarray:
+    """True on the first schedule entry that touches each output channel
+    (the iteration that loads + decays that channel's membrane row)."""
+    seen = set()
+    flags = np.zeros(sched.reps, dtype=bool)
+    for i in range(sched.reps):
+        oc = int(sched.oc[i])
+        if oc >= 0 and oc not in seen:
+            seen.add(oc)
+            flags[i] = True
+    return flags
+
+
+def schedule_interpreter(
+    spikes_t: jax.Array,
+    sched: Schedule,
+    lif: LIFParams,
+    oi: int,
+    oc: int,
+    v0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, dict]:
+    """Execute the static SAOCDS schedule, one iteration per scan step.
+
+    spikes_t: (T, IC, WI) pre-padded binary frames.  Returns
+    (out_spikes (T, OC, OI), v_final, counts) where counts carries the
+    per-run iteration statistics (compute/extra/empty reps and the gated
+    accumulation count — paper Tables I/III quantities).
+    """
+    t_steps, _, wi = spikes_t.shape
+    if v0 is None:
+        v0 = jnp.zeros((oc, oi), dtype=jnp.float32)
+
+    kind = jnp.asarray(sched.kind)
+    weight = jnp.asarray(sched.weight)
+    oc_arr = jnp.asarray(np.maximum(sched.oc, 0))
+    valid_oc = jnp.asarray(sched.oc >= 0)
+    ic_arr = jnp.asarray(np.maximum(sched.ic, 0))
+    ci_arr = jnp.asarray(sched.ci)
+    emit = jnp.asarray(sched.emit)
+    decay_flag = jnp.asarray(_first_touch_flags(sched))
+
+    alpha = jnp.broadcast_to(lif.alpha, (oc, oi))
+    theta = jnp.broadcast_to(lif.theta, (oc, oi))
+    v_th = jnp.broadcast_to(lif.v_th, (oc, oi))
+
+    def one_timestep(v, ifm):
+        out = jnp.zeros((oc, oi), dtype=jnp.float32)
+
+        def iteration(carry, idx):
+            v, out, acc_count = carry
+            k = kind[idx]
+            row = oc_arr[idx]
+            is_compute = (k == ITER_COMPUTE)
+            is_extra = (k == ITER_EXTRA)
+            touch = valid_oc[idx]
+
+            v_row = jax.lax.dynamic_slice(v, (row, 0), (1, oi))[0]
+            # first-touch: load + decay this channel's membrane row
+            a_row = jax.lax.dynamic_slice(alpha, (row, 0), (1, oi))[0]
+            v_row = jnp.where(decay_flag[idx] & touch, a_row * v_row, v_row)
+
+            # enable-map gated accumulation (compute iterations only)
+            em = jax.lax.dynamic_slice(ifm, (ic_arr[idx], ci_arr[idx]), (1, oi))[0]
+            gated = em.astype(jnp.float32)
+            v_row = v_row + jnp.where(is_compute, weight[idx] * gated, 0.0)
+            acc_count = acc_count + jnp.where(is_compute, gated.sum(), 0.0)
+
+            # fire + soft reset + emit on this channel's last iteration
+            th_row = jax.lax.dynamic_slice(v_th, (row, 0), (1, oi))[0]
+            t_row = jax.lax.dynamic_slice(theta, (row, 0), (1, oi))[0]
+            s_row = (v_row > th_row).astype(jnp.float32)
+            do_emit = emit[idx] & touch
+            v_row = jnp.where(do_emit, v_row - t_row * s_row, v_row)
+            out_row = jnp.where(do_emit, s_row, jax.lax.dynamic_slice(out, (row, 0), (1, oi))[0])
+
+            v = jnp.where(
+                touch, jax.lax.dynamic_update_slice(v, v_row[None], (row, 0)), v
+            )
+            out = jnp.where(
+                touch, jax.lax.dynamic_update_slice(out, out_row[None], (row, 0)), out
+            )
+            return (v, out, acc_count), None
+
+        (v, out, acc), _ = jax.lax.scan(
+            iteration, (v, out, jnp.float32(0.0)), jnp.arange(sched.reps)
+        )
+        return v, (out, acc)
+
+    v_final, (outs, accs) = jax.lax.scan(one_timestep, v0, spikes_t)
+    counts = {
+        "reps_per_timestep": sched.reps,
+        "compute_iters": sched.n_compute,
+        "extra_iters": sched.n_extra,
+        "empty_iters": sched.n_empty,
+        "accumulations": accs.sum(),
+        "timesteps": t_steps,
+    }
+    return outs, v_final, counts

@@ -1,0 +1,11 @@
+"""Data substrate: synthetic RadioML 2016.10A generator + pipelines."""
+
+from .radioml import (
+    MODULATIONS,
+    N_CLASSES,
+    SNR_GRID,
+    generate_sample,
+    generate_batch,
+    RadioMLDataset,
+)
+from .pipeline import SpikeBatchPipeline, lm_token_batches

@@ -1,0 +1,114 @@
+"""Input pipelines: host-side generation -> sigma-delta encoding -> device.
+
+``SpikeBatchPipeline`` is the AMC training/serving pipeline: a background
+thread generates RadioML batches and sigma-delta-encodes them (numpy,
+identical numerics to ``repro.core.encoder``) while the device computes —
+the streaming-overlap analogue of the paper's fully-pipelined input stage.
+A bounded queue provides backpressure; the depth is the straggler-absorption
+budget (a slow generation step does not bubble the accelerator until the
+queue drains).
+
+``lm_token_batches`` serves the LM-family architectures with deterministic
+synthetic token streams (Zipf-distributed ids) for trainer smoke tests.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+from .radioml import RadioMLDataset
+
+__all__ = ["sigma_delta_encode_np", "SpikeBatchPipeline", "lm_token_batches"]
+
+
+def sigma_delta_encode_np(iq: np.ndarray, osr: int) -> np.ndarray:
+    """Vectorized numpy sigma-delta (matches repro.core.encoder exactly).
+
+    iq: (B, 2, L) float -> (B, T=osr, 2, L) float32 in {0, 1}.
+    """
+    peak = np.max(np.abs(iq), axis=(-2, -1), keepdims=True)
+    x = 0.5 * (iq / (peak + 1e-8) + 1.0)
+    integ = np.zeros_like(x)
+    y_prev = np.zeros_like(x)
+    bits = np.empty((osr,) + x.shape, dtype=np.float32)
+    for t in range(osr):
+        integ = integ + x - y_prev
+        y_prev = (integ >= 0.5).astype(np.float32)
+        bits[t] = y_prev
+    # (T, B, 2, L) -> (B, T, 2, L)
+    return np.moveaxis(bits, 0, 1)
+
+
+class SpikeBatchPipeline:
+    """Background-threaded batch producer with bounded-queue backpressure."""
+
+    def __init__(
+        self,
+        batch_size: int,
+        osr: int = 8,
+        seed: int = 0,
+        snr_db: Optional[float] = None,
+        prefetch: int = 4,
+        sharding: Optional[jax.sharding.Sharding] = None,
+    ):
+        self.osr = osr
+        self.sharding = sharding
+        self._ds = iter(RadioMLDataset(batch_size, seed=seed, snr_db=snr_db))
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while not self._stop.is_set():
+            iq, labels, snrs = next(self._ds)
+            frames = sigma_delta_encode_np(iq, self.osr)
+            try:
+                self._q.put((frames, labels, snrs), timeout=1.0)
+            except queue.Full:
+                if self._stop.is_set():
+                    return
+                # retry; the consumer is slow, backpressure holds
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((frames, labels, snrs), timeout=1.0)
+                        break
+                    except queue.Full:
+                        continue
+
+    def __iter__(self) -> Iterator[Tuple[jax.Array, jax.Array, jax.Array]]:
+        return self
+
+    def __next__(self):
+        frames, labels, snrs = self._q.get()
+        if self.sharding is not None:
+            frames = jax.device_put(frames, self.sharding)
+            labels = jax.device_put(labels, self.sharding)
+        return frames, labels, snrs
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)
+
+
+def lm_token_batches(
+    batch: int, seq_len: int, vocab: int, seed: int = 0
+) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Deterministic Zipf-ish token stream: yields (tokens, labels)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    while True:
+        toks = rng.choice(vocab, size=(batch, seq_len + 1), p=probs).astype(np.int32)
+        yield toks[:, :-1], toks[:, 1:]

@@ -1,0 +1,16 @@
+from .ctx import activation_constraints, constrain_acts, constrain_logits
+from .sharding import (
+    act_pspec,
+    decode_state_specs,
+    dp_axes,
+    logits_pspec,
+    named_tree,
+    partition_params,
+    train_batch_spec,
+)
+
+__all__ = [
+    "activation_constraints", "constrain_acts", "constrain_logits",
+    "act_pspec", "decode_state_specs", "dp_axes", "logits_pspec",
+    "named_tree", "partition_params", "train_batch_spec",
+]

@@ -1,0 +1,100 @@
+"""Gradient compression: int8 quantization with error feedback (EF).
+
+At 1000+ nodes the cross-pod gradient all-reduce rides the slow DCN links;
+8-bit gradients cut that traffic 4x.  Plain quantization biases training;
+error feedback (Seide et al., 1-bit SGD lineage) keeps the *accumulated*
+quantization residual on-worker and folds it into the next step, restoring
+convergence to within noise (verified in tests/test_distributed.py).
+
+Pure pytree functions — compose with any optimizer:
+
+    acc        = grads + ef
+    q, scales  = quantize(acc)          # int8 + per-leaf scale
+    new_ef     = acc - dequantize(q, scales)
+
+``compressed_psum`` is the shard_map building block: it quantizes, psums
+the int32-widened int8 payload (exact — no overflow for <= 2^23 workers),
+dequantizes, and returns the mean plus the residual.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_int8",
+    "dequantize_int8",
+    "ef_compress",
+    "compressed_psum",
+    "compression_ratio",
+]
+
+
+def quantize_int8(tree: Any) -> Tuple[Any, Any]:
+    """Per-leaf symmetric int8 quantization: returns (q_tree, scale_tree)."""
+    def q(x):
+        s = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0
+        s = jnp.maximum(s, 1e-30)
+        return jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127
+                        ).astype(jnp.int8), s
+
+    leaves = jax.tree_util.tree_map(q, tree)
+    qs = jax.tree_util.tree_map(lambda t: t[0], leaves,
+                                is_leaf=lambda t: isinstance(t, tuple))
+    ss = jax.tree_util.tree_map(lambda t: t[1], leaves,
+                                is_leaf=lambda t: isinstance(t, tuple))
+    return qs, ss
+
+
+def dequantize_int8(q_tree: Any, scale_tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, q_tree, scale_tree
+    )
+
+
+def ef_compress(grads: Any, ef: Any) -> Tuple[Any, Any, Any]:
+    """(grads, ef) -> (q, scales, new_ef) with error feedback."""
+    acc = jax.tree_util.tree_map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, ef
+    )
+    q, s = quantize_int8(acc)
+    deq = dequantize_int8(q, s)
+    new_ef = jax.tree_util.tree_map(lambda a, d: a - d, acc, deq)
+    return q, s, new_ef
+
+
+def compressed_psum(grads: Any, ef: Any, axis_name: str) -> Tuple[Any, Any]:
+    """Error-feedback int8 all-reduce for shard_map data parallelism.
+
+    Returns (mean_grads, new_ef).  The int8 payload is widened to int32
+    for the psum (exact integer accumulation) and scales are psum-maxed so
+    every worker dequantizes identically.
+    """
+    n = jax.lax.psum(1, axis_name)
+    q, s, new_ef = ef_compress(grads, ef)
+    # shared scale: use the max over workers so the int grid is common
+    s_max = jax.tree_util.tree_map(
+        lambda x: jax.lax.pmax(x, axis_name), s
+    )
+    # requantize on the shared grid (cheap: int8 -> f32 -> int32)
+    q_shared = jax.tree_util.tree_map(
+        lambda qq, ss, sm: jnp.round(
+            qq.astype(jnp.float32) * ss / sm).astype(jnp.int32),
+        q, s, s_max,
+    )
+    summed = jax.tree_util.tree_map(
+        lambda x: jax.lax.psum(x, axis_name), q_shared
+    )
+    mean = jax.tree_util.tree_map(
+        lambda x, sm: x.astype(jnp.float32) * sm / n, summed, s_max
+    )
+    return mean, new_ef
+
+
+def compression_ratio(tree: Any) -> float:
+    """fp32 bytes / int8+scale bytes for a gradient pytree."""
+    fp32 = sum(x.size * 4 for x in jax.tree_util.tree_leaves(tree))
+    comp = sum(x.size * 1 + 4 for x in jax.tree_util.tree_leaves(tree))
+    return fp32 / comp

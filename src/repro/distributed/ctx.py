@@ -1,0 +1,155 @@
+"""Activation-sharding constraint context.
+
+Models stay mesh-agnostic: they call :func:`constrain_acts` /
+:func:`constrain_logits` at the canonical cut points (post-embedding,
+between layers, pre-unembedding).  Outside a context these are identity;
+inside ``activation_constraints(...)`` they apply
+``jax.lax.with_sharding_constraint`` with the registered specs.
+
+This is the software analogue of the paper's fixed output-channel
+dataflow: the residual stream's layout between layers is pinned once, so
+XLA's sharding propagation cannot drift layer by layer — every layer
+hands the next one the exact same distribution, like the accelerator's
+channel-ordered stream (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+__all__ = [
+    "activation_constraints",
+    "constrain_acts",
+    "constrain_logits",
+    "constrain_head",
+    "current_act_sharding",
+]
+
+_STACK: list = []  # (act_sharding, logits_sharding, head_sharding)
+
+
+@contextlib.contextmanager
+def activation_constraints(act_sharding=None, logits_sharding=None,
+                           head_sharding=None):
+    """Register shardings for the residual stream, the logits, and the
+    pre-unembedding residual (``head``).
+
+    Any may be ``None`` (identity).  Shardings are
+    ``jax.sharding.NamedSharding`` (or anything accepted by
+    ``with_sharding_constraint``) over (batch, seq, feature) arrays.
+
+    ``head_sharding`` exists because the unembedding wants the residual
+    sequence-REPLICATED: with a sequence-sharded ``x`` and vocab-sharded
+    ``d_logits``, XLA's only consistent contraction for ``d_unemb`` is to
+    all-gather the full (B, S, V) logits grad — 39.8 GB/device on the
+    qwen1.5-0.5b train_4k dry-run.  Gathering the (B, S, d) residual
+    instead is ~150x smaller (Megatron does exactly this before the LM
+    head).
+    """
+    _STACK.append((act_sharding, logits_sharding, head_sharding))
+    try:
+        yield
+    finally:
+        _STACK.pop()
+
+
+def current_act_sharding():
+    return _STACK[-1][0] if _STACK else None
+
+
+def _apply(x: jax.Array, sharding) -> jax.Array:
+    if sharding is None:
+        return x
+    # Drop trailing spec dims beyond x's rank (decode steps are (B, 1, d)
+    # like train acts, so rank always matches; guard anyway).
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def constrain_acts(x: jax.Array) -> jax.Array:
+    """Pin the residual-stream layout (batch, seq, d_model)."""
+    if not _STACK:
+        return x
+    return _apply(x, _STACK[-1][0])
+
+
+def constrain_logits(x: jax.Array) -> jax.Array:
+    """Pin the logits layout (batch, seq, vocab)."""
+    if not _STACK:
+        return x
+    return _apply(x, _STACK[-1][1])
+
+
+def constrain_head(x: jax.Array) -> jax.Array:
+    """Pin the pre-unembedding residual layout (batch, seq, d_model)."""
+    if not _STACK:
+        return x
+    return _apply(x, _STACK[-1][2])
+
+
+def constrain_expert(x: jax.Array, e_axis: int) -> jax.Array:
+    """Pin an MoE dispatch tensor so the expert dim shards over `model`
+    (expert parallelism): the expert FFN einsums then keep the e-sharded
+    weights local.  Without the anchor XLA all-gathered the full expert
+    weights every layer (~20 GB/layer on llama4-scout train).  No-op when
+    E doesn't divide the model axis (TP-inside-experts handles those)."""
+    if not _STACK:
+        return x
+    act = _STACK[-1][0]
+    if act is None or not hasattr(act, "mesh"):
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = act.mesh
+    model_n = mesh.shape.get("model", 1)
+    if model_n <= 1 or x.shape[e_axis] % model_n != 0:
+        return x
+    batch_ax = act.spec[0] if len(act.spec) else None
+    dims = [None] * x.ndim
+    dims[0] = batch_ax
+    dims[e_axis] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*dims)))
+
+
+def constrain_seq_gathered(x: jax.Array) -> jax.Array:
+    """Explicitly replicate a (B, S, ...) tensor over the model axis
+    (keeping the batch axis): one clean all-gather.  Used for K/V before
+    kv-chunked attention — slicing a sequence-sharded K with a loop-
+    variable offset makes XLA mask+push the partial through the score dot
+    and ALL-REDUCE the full (B, H, S, qc) scores (5.4 GB x 1024 on the
+    whisper prefill cell)."""
+    if not _STACK:
+        return x
+    act = _STACK[-1][0]
+    if act is None or not hasattr(act, "mesh"):
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = act.mesh
+    batch_ax = act.spec[0] if len(act.spec) else None
+    spec = P(batch_ax, *(None,) * (x.ndim - 1))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_hidden(x: jax.Array) -> jax.Array:
+    """Pin a (B, S, hidden) stream whose LAST dim is TP-wide (an RG-LRU /
+    MLP inner stream, not the residual): batch keeps the registered act
+    sharding's batch axis, sequence replicates (Megatron-style inside the
+    block), hidden shards over `model` when divisible.  Without this XLA
+    dropped the batch sharding of the w-wide RG-LRU stream (1.07 GB f32
+    buffers on recurrentgemma train)."""
+    if not _STACK:
+        return x
+    act = _STACK[-1][0]
+    if act is None or not hasattr(act, "mesh"):
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = act.mesh
+    batch_ax = act.spec[0] if len(act.spec) else None
+    model_n = mesh.shape.get("model", 1)
+    h_ax = "model" if (model_n > 1 and x.shape[-1] % model_n == 0) else None
+    spec = P(batch_ax, *(None,) * (x.ndim - 2), h_ax)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

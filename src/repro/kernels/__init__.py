@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel ships with a pure-jnp oracle in ``ref.py`` and a jit'd
+framework-facing wrapper in ``ops.py``; tests sweep shapes/dtypes in
+interpret mode (this container is CPU-only; TPU v5e is the target).
+"""
+
+from .goap_conv import goap_conv_block_sparse
+from .wm_fc import wm_fc_matmul
+from .lif_update import lif_update_fused
+from .ops import goap_conv_op, wm_fc_op, lif_op
+from . import ref

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors the corresponding kernel's contract exactly (same
+argument/return shapes, including padding behaviour) so tests can
+``assert_allclose`` across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["goap_conv_block_sparse_ref", "wm_fc_matmul_ref", "lif_update_fused_ref"]
+
+
+def goap_conv_block_sparse_ref(
+    blocks: jax.Array,      # (n_oc_tiles, max_tiles, BO, BK)
+    block_cols: jax.Array,  # (n_oc_tiles, max_tiles)
+    x: jax.Array,           # (K_padded, OI_padded)
+) -> jax.Array:
+    """out[r*BO:(r+1)*BO] = sum_t blocks[r, t] @ x[cols[r,t]*BK : +BK]."""
+    n_oc_tiles, max_tiles, bo, bk = blocks.shape
+    _, oi = x.shape
+    xt = x.reshape(-1, bk, oi)  # (n_k_tiles, BK, OI)
+
+    def row(r_blocks, r_cols):
+        tiles = xt[r_cols]  # (max_tiles, BK, OI)
+        return jnp.einsum(
+            "tok,tki->oi", r_blocks, tiles.astype(r_blocks.dtype),
+            preferred_element_type=blocks.dtype,
+        )
+
+    out = jax.vmap(row)(blocks, block_cols)  # (n_oc_tiles, BO, OI)
+    return out.reshape(n_oc_tiles * bo, oi)
+
+
+def wm_fc_matmul_ref(spikes: jax.Array, weights: jax.Array) -> jax.Array:
+    return spikes.astype(weights.dtype) @ weights
+
+
+def lif_update_fused_ref(currents, v0, alpha, theta, v_th):
+    """Matches repro.core.lif dynamics (hardware write-back convention)."""
+    def step(v, c):
+        v = alpha * v + c
+        s = (v > v_th).astype(v.dtype)
+        v = v - theta * s
+        return v, s
+
+    v_fin, spikes = jax.lax.scan(step, v0, currents)
+    return spikes, v_fin

@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes and extract the roofline terms from the compiled
+artifact.
+
+The two lines above MUST precede any other import (jax locks the device
+count on first init); only this entry point sees 512 placeholder devices
+— tests and benches keep the 1-CPU view.
+
+Usage:
+    # one cell (this is what the sweep spawns)
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+    # full sweep (subprocess per cell, resumable)
+    python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import subprocess
+import sys
+import time
+import traceback
+
+__all__ = ["run_cell", "main"]
+
+_RESULTS_DEFAULT = "experiments/dryrun"
+
+
+def _json_default(o):
+    if dataclasses.is_dataclass(o):
+        return dataclasses.asdict(o)
+    return str(o)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, save_hlo: str = "",
+             kv_int8: bool = False) -> dict:
+    """Lower + compile one cell on one mesh; return the result record."""
+    import jax
+
+    from repro.configs.registry import SHAPES, cell_applicable, get_config
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import roofline_terms
+    from repro.launch.steps import build_cell
+
+    rec: dict = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind,
+        "jax": jax.__version__, "ok": False,
+    }
+    ok, why = cell_applicable(arch, shape)
+    if not ok:
+        rec.update(skipped=True, reason=why, ok=True)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = len(mesh.devices.flat)
+    rec["chips"] = chips
+    rec["mesh_shape"] = dict(mesh.shape)
+
+    t0 = time.perf_counter()
+    rec["kv_int8"] = kv_int8
+    plan = build_cell(arch, shape, mesh, kv_int8=kv_int8)
+    with mesh:
+        lowered = plan.lower()
+        rec["lower_s"] = round(time.perf_counter() - t0, 2)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.perf_counter() - t1, 2)
+
+    # ---- memory: proves the per-device program fits HBM ----
+    try:
+        ma = compiled.memory_analysis()
+        print(ma)
+        rec["memory"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        }
+        live = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        rec["memory"]["peak_live_bytes"] = live
+        rec["memory"]["fits_16g_hbm"] = bool(live < 16 * 1024**3)
+    except Exception as e:  # pragma: no cover - backend specific
+        rec["memory"] = {"error": repr(e)}
+
+    # ---- XLA's own cost analysis (per-device; while bodies counted once) ----
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+        rec["xla_cost"] = {
+            "flops": ca.get("flops"),
+            "bytes_accessed": ca.get("bytes accessed"),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["xla_cost"] = {"error": repr(e)}
+
+    # ---- trip-count-aware HLO analysis + roofline ----
+    t2 = time.perf_counter()
+    text = compiled.as_text()
+    rec["hlo_chars"] = len(text)
+    analysis = analyze_hlo(text)
+    rec["analyze_s"] = round(time.perf_counter() - t2, 2)
+    rec["hlo"] = analysis.summary()
+    rec["roofline"] = roofline_terms(
+        get_config(arch), SHAPES[shape], analysis, chips
+    )
+    if save_hlo:
+        pathlib.Path(save_hlo).write_text(text)
+    rec["ok"] = True
+    return rec
+
+
+def _cell_path(out: pathlib.Path, mesh: str, arch: str, shape: str) -> pathlib.Path:
+    return out / mesh / f"{arch}__{shape}.json"
+
+
+def _sweep(out: pathlib.Path, meshes, timeout: int, force: bool) -> int:
+    from repro.configs.registry import all_cells
+
+    failures = 0
+    todo = []
+    for mesh in meshes:
+        for arch, shape, ok, why in all_cells():
+            todo.append((mesh, arch, shape, ok, why))
+    print(f"sweep: {len(todo)} cells -> {out}")
+    for i, (mesh, arch, shape, ok, why) in enumerate(todo):
+        path = _cell_path(out, mesh, arch, shape)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        if path.exists() and not force:
+            continue
+        if not ok:
+            path.write_text(json.dumps({
+                "arch": arch, "shape": shape, "mesh": mesh,
+                "ok": True, "skipped": True, "reason": why,
+            }, indent=1))
+            continue
+        print(f"[{i + 1}/{len(todo)}] {mesh:6s} {arch} x {shape} ...",
+              flush=True)
+        t0 = time.perf_counter()
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", arch, "--shape", shape, "--mesh", mesh,
+             "--out", str(out)],
+            capture_output=True, text=True, timeout=timeout,
+            env={**os.environ, "PYTHONPATH": "src"},
+        )
+        dt = time.perf_counter() - t0
+        if proc.returncode != 0 or not path.exists():
+            failures += 1
+            path.write_text(json.dumps({
+                "arch": arch, "shape": shape, "mesh": mesh, "ok": False,
+                "error": proc.stderr[-4000:], "wall_s": round(dt, 1),
+            }, indent=1))
+            print(f"    FAILED ({dt:.0f}s): {proc.stderr.strip().splitlines()[-1][:200] if proc.stderr.strip() else 'no stderr'}")
+        else:
+            rec = json.loads(path.read_text())
+            r = rec.get("roofline", {})
+            print(f"    ok ({dt:.0f}s) bottleneck={r.get('bottleneck')} "
+                  f"terms={ {k: f'{v:.2e}' for k, v in r.get('terms_s', {}).items()} }")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="sweep every cell in subprocesses")
+    ap.add_argument("--out", default=_RESULTS_DEFAULT)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--save-hlo", default="")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="decode cells: int8-quantized KV cache")
+    args = ap.parse_args(argv)
+
+    out = pathlib.Path(args.out)
+    if args.all:
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        return 1 if _sweep(out, meshes, args.timeout, args.force) else 0
+
+    assert args.arch and args.shape and args.mesh in ("single", "multi")
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh, save_hlo=args.save_hlo,
+                       kv_int8=args.kv_int8)
+    except Exception:
+        rec = {
+            "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+            "ok": False, "error": traceback.format_exc()[-4000:],
+        }
+    path = _cell_path(out, args.mesh, args.arch, args.shape)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(rec, indent=1, default=_json_default))
+    print(json.dumps({k: rec[k] for k in ("arch", "shape", "mesh", "ok") if k in rec}))
+    if not rec.get("ok"):
+        print(rec.get("error", ""), file=sys.stderr)
+    return 0 if rec.get("ok") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,373 @@
+"""Trip-count-aware HLO cost model for the dry-run roofline.
+
+``compiled.cost_analysis()`` visits each ``while`` body **once**, but every
+assigned architecture scans over its layer stack (and attention scans over
+query chunks), so XLA's numbers under-count FLOPs/bytes by the trip count.
+This module parses the *optimized* HLO text and computes:
+
+* ``dot_flops``   — 2*M*N*K per dot/convolution, recursively descending
+  into while bodies multiplied by their trip count (extracted from the
+  loop-condition ``compare(counter, constant)`` pattern jax scans lower
+  to), and into call/fusion computations.
+* ``bytes``       — per-instruction operand+result bytes at **fusion
+  granularity** (a fusion is one kernel: its operands/result are the HBM
+  traffic), again trip-count aware.  Bookkeeping ops (tuple plumbing,
+  parameters, constants, bitcasts) are free.
+* ``collectives`` — per-type counts and bytes for all-gather/all-reduce/
+  reduce-scatter/all-to-all/collective-permute, with both the raw result
+  bytes and a ring-model "wire bytes" estimate using the parsed replica
+  group size g:  AG: r*(g-1)/g,  AR: 2*r*(g-1)/g,  RS: r*(g-1),
+  A2A: r*(g-1)/g,  CP: r  (r = result bytes).
+
+All numbers are **per device** (the SPMD module is the per-device
+program); multiply by chip count for global totals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloAnalysis", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_CALLSITE_RE = re.compile(r"(?:calls|body|condition|branch_computations|to_apply)="
+                          r"(?:\{([^}]*)\}|%?([\w\.\-]+))")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "call",
+    "conditional", "custom-call", "reshape", "get-dimension-size",
+}
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    rest: str            # operand list + attributes (tail of the line)
+
+
+@dataclasses.dataclass
+class CollectiveStat:
+    count: int = 0
+    result_bytes: float = 0.0
+    wire_bytes: float = 0.0
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    dot_flops: float
+    bytes_accessed: float
+    collectives: Dict[str, CollectiveStat]
+    warnings: List[str]
+    byte_contrib: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(c.result_bytes for c in self.collectives.values())
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(c.wire_bytes for c in self.collectives.values())
+
+    def summary(self) -> Dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "wire_bytes": self.wire_bytes,
+            "collectives": {
+                k: dataclasses.asdict(v) for k, v in self.collectives.items()
+            },
+            "warnings": self.warnings[:20],
+        }
+
+
+def _type_bytes(type_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",") if d]
+
+
+def _split_top(s: str) -> List[str]:
+    """Split an operand list on top-level commas."""
+    parts, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+            if depth < 0:
+                break
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur).strip())
+    return parts
+
+
+def _parse_computations(text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    current: Optional[str] = None
+    for line in text.splitlines():
+        if current is None:
+            m = _COMP_RE.match(line)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, rtype, op, rest = m.groups()
+            comps[current].append(Instr(name, rtype, op, rest))
+    return comps
+
+
+class _Analyzer:
+    def __init__(self, comps: Dict[str, List[Instr]]):
+        self.comps = comps
+        self.warnings: List[str] = []
+        self.collectives: Dict[str, CollectiveStat] = {}
+        self._trip_cache: Dict[str, int] = {}
+        self.byte_contrib: Dict[str, float] = {}   # trip-weighted, by shape
+        self._sym: Dict[str, Dict[str, str]] = {
+            cname: {i.name: i.result_type for i in instrs}
+            for cname, instrs in comps.items()
+        }
+
+    # -- helpers ------------------------------------------------------------
+
+    def _operands(self, instr: Instr, cname: str) -> List[Optional[Tuple[str, List[int]]]]:
+        """Operand (dtype, dims) list; resolves bare %names via symbol table."""
+        # operand text = up to the matching close paren of the op's '('
+        ops_txt = _split_top(instr.rest)
+        out = []
+        for o in ops_txt:
+            o = o.strip()
+            if not o:
+                continue
+            sd = _shape_dims(o)
+            if sd is None:
+                ref = o.lstrip("%").split(" ")[-1].lstrip("%")
+                t = self._sym.get(cname, {}).get(ref)
+                sd = _shape_dims(t) if t else None
+            out.append(sd)
+        return out
+
+    def trip_count(self, cond_name: str) -> int:
+        if cond_name in self._trip_cache:
+            return self._trip_cache[cond_name]
+        trip = 1
+        instrs = self.comps.get(cond_name, [])
+        consts = []
+        for i in instrs:
+            m = _CONST_RE.search(f"= {i.result_type} {i.op}({i.rest}")
+            if i.op == "constant" and i.result_type.startswith("s32[]"):
+                mc = re.search(r"constant\((\d+)\)", "constant(" + i.rest)
+                if mc:
+                    consts.append(int(mc.group(1)))
+        if consts:
+            trip = max(consts)
+        else:
+            self.warnings.append(f"no trip count for {cond_name}; assuming 1")
+        self._trip_cache[cond_name] = trip
+        return trip
+
+    def _called(self, instr: Instr) -> List[str]:
+        names = []
+        for m in _CALLSITE_RE.finditer(instr.rest):
+            if m.group(1) is not None:
+                names += [x.strip().lstrip("%") for x in m.group(1).split(",")]
+            else:
+                names.append(m.group(2))
+        return [n for n in names if n in self.comps]
+
+    # -- recursive cost -----------------------------------------------------
+
+    def flops(self, cname: str, mult: float = 1.0, _depth=0) -> float:
+        if _depth > 50:
+            return 0.0
+        total = 0.0
+        for instr in self.comps.get(cname, []):
+            if instr.op in ("dot", "convolution"):
+                res = _shape_dims(instr.result_type)
+                opnds = self._operands(instr, cname)
+                k = 1
+                mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+                if res and opnds and opnds[0] and mdims:
+                    lhs_dims = opnds[0][1]
+                    for ci in mdims.group(1).split(","):
+                        if ci:
+                            k *= lhs_dims[int(ci)]
+                elif instr.op == "convolution" and opnds and len(opnds) > 1 and opnds[1]:
+                    # rhs = kernel: spatial*input-feature contraction
+                    k = 1
+                    for d in opnds[1][1][:-1]:
+                        k *= d
+                n_out = 1
+                if res:
+                    for d in res[1]:
+                        n_out *= d
+                total += 2.0 * n_out * k
+            elif instr.op == "while":
+                called = dict(
+                    body=None, condition=None
+                )
+                mb = re.search(r"body=%?([\w\.\-]+)", instr.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", instr.rest)
+                trips = self.trip_count(mc.group(1)) if mc else 1
+                if mb and mb.group(1) in self.comps:
+                    total += self.flops(mb.group(1), trips, _depth + 1)
+            elif instr.op in ("fusion", "call", "conditional", "reduce",
+                              "scatter", "sort", "map", "reduce-window",
+                              "select-and-scatter", "custom-call"):
+                for sub in self._called(instr):
+                    total += self.flops(sub, 1.0, _depth + 1)
+        return total * mult
+
+    def bytes_(self, cname: str, mult: float = 1.0, _depth=0) -> float:
+        if _depth > 50:
+            return 0.0
+        total = 0.0
+        for instr in self.comps.get(cname, []):
+            if instr.op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", instr.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", instr.rest)
+                trips = self.trip_count(mc.group(1)) if mc else 1
+                if mb and mb.group(1) in self.comps:
+                    total += self.bytes_(mb.group(1), trips, _depth + 1)
+                continue
+            if instr.op in ("call", "conditional"):
+                for sub in self._called(instr):
+                    total += self.bytes_(sub, 1.0, _depth + 1)
+                continue
+            if instr.op.rstrip("-start").rstrip("-done") in _COLLECTIVES or \
+               instr.op in _COLLECTIVES:
+                continue  # network, tracked separately
+            if instr.op in _SKIP_BYTES and instr.op != "custom-call":
+                continue
+            # fusion and any remaining compute op: operands + result
+            res_b = _type_bytes(instr.result_type)
+            opnd_b = 0.0
+            for sd in self._operands(instr, cname):
+                if sd:
+                    n = 1
+                    for d in sd[1]:
+                        n *= d
+                    opnd_b += n * DTYPE_BYTES.get(sd[0], 0)
+            total += res_b + opnd_b
+            key = re.sub(r"\{[^}]*\}", "", instr.result_type)[:80]
+            self.byte_contrib[key] = self.byte_contrib.get(key, 0.0) + \
+                (res_b + opnd_b) * mult
+        return total * mult
+
+    def collect(self, cname: str, mult: float = 1.0, _depth=0) -> None:
+        if _depth > 50:
+            return
+        for instr in self.comps.get(cname, []):
+            base_op = instr.op
+            if base_op.endswith("-done"):
+                continue
+            stripped = base_op[:-6] if base_op.endswith("-start") else base_op
+            if stripped in _COLLECTIVES:
+                r = _type_bytes(instr.result_type)
+                if base_op.endswith("-start"):
+                    r = r / 2.0  # start tuples carry (src, dst) buffers
+                g = self._group_size(instr)
+                wire = {
+                    "all-gather": r * (g - 1) / max(1, g),
+                    "all-reduce": 2.0 * r * (g - 1) / max(1, g),
+                    "reduce-scatter": r * (g - 1),
+                    "all-to-all": r * (g - 1) / max(1, g),
+                    "collective-permute": r,
+                }[stripped]
+                st = self.collectives.setdefault(stripped, CollectiveStat())
+                st.count += int(mult)
+                st.result_bytes += r * mult
+                st.wire_bytes += wire * mult
+            elif base_op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", instr.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", instr.rest)
+                trips = self.trip_count(mc.group(1)) if mc else 1
+                if mb and mb.group(1) in self.comps:
+                    self.collect(mb.group(1), mult * trips, _depth + 1)
+            elif base_op in ("call", "conditional", "fusion"):
+                for sub in self._called(instr):
+                    self.collect(sub, mult, _depth + 1)
+
+    def _group_size(self, instr: Instr) -> int:
+        m = _GROUPS_IOTA_RE.search(instr.rest)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_LIST_RE.search(instr.rest)
+        if m:
+            return len([x for x in m.group(1).split(",") if x.strip() != ""])
+        if "collective-permute" in instr.op:
+            return 2
+        self.warnings.append(f"no replica_groups on {instr.name}")
+        return 1
+
+
+def _entry_name(text: str) -> Optional[str]:
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                return m.group(1)
+    return None
+
+
+def analyze_hlo(text: str) -> HloAnalysis:
+    comps = _parse_computations(text)
+    entry = _entry_name(text)
+    if entry is None:
+        return HloAnalysis(0.0, 0.0, {}, ["no ENTRY computation found"])
+    a = _Analyzer(comps)
+    flops = a.flops(entry)
+    nbytes = a.bytes_(entry)
+    a.collect(entry)
+    top = dict(sorted(a.byte_contrib.items(), key=lambda kv: -kv[1])[:25])
+    return HloAnalysis(flops, nbytes, a.collectives, a.warnings, top)

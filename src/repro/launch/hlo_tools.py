@@ -1,0 +1,85 @@
+"""Interactive HLO inspection helpers for the perf hillclimb loop.
+
+``python -m repro.launch.hlo_tools <file.hlo> [--thresh 2e8]`` prints the
+big-buffer census and the collective census grouped by (op, shape) — the
+two views every §Perf iteration starts from.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import re
+import sys
+from typing import Dict, List, Tuple
+
+from .hlo_analysis import DTYPE_BYTES, _SHAPE_RE
+
+__all__ = ["type_bytes", "big_buffers", "collectives_by_shape"]
+
+_RESULT_RE = re.compile(
+    r"\s*(?:ROOT )?%?[\w\.\-]+ = (\(.*?\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+
+
+def type_bytes(t: str) -> int:
+    tot = 0
+    for dt, dims in _SHAPE_RE.findall(t):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        tot += n * DTYPE_BYTES[dt]
+    return int(tot)
+
+
+def big_buffers(text: str, thresh: float = 2e8) -> List[Tuple[str, str, int, int]]:
+    """(computation, shape, bytes, mentions) sorted by bytes*mentions."""
+    comp = "?"
+    ctr: Dict[Tuple[str, str], int] = collections.Counter()
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            comp = m.group(1)
+            continue
+        m = _RESULT_RE.match(line)
+        if m and type_bytes(m.group(1)) > thresh:
+            shape = re.sub(r"\{[^}]*\}", "", m.group(1))
+            ctr[(comp, shape)] += 1
+    rows = [(c, s, type_bytes(s), n) for (c, s), n in ctr.items()]
+    return sorted(rows, key=lambda r: -r[2] * r[3])
+
+
+def collectives_by_shape(text: str) -> List[Tuple[str, str, int, int]]:
+    """(op, shape, bytes, count) for every collective, sorted by volume."""
+    ops = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+           "collective-permute")
+    ctr: Dict[Tuple[str, str], int] = collections.Counter()
+    for line in text.splitlines():
+        m = _RESULT_RE.match(line)
+        if m and m.group(2).rstrip("-start") in ops:
+            shape = re.sub(r"\{[^}]*\}", "", m.group(1))
+            ctr[(m.group(2), shape)] += 1
+    rows = [(op, s, type_bytes(s), n) for (op, s), n in ctr.items()]
+    return sorted(rows, key=lambda r: -r[2] * r[3])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("hlo")
+    ap.add_argument("--thresh", type=float, default=2e8)
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args(argv)
+    text = open(args.hlo).read()
+    print("== big buffers (comp, shape, GB, mentions)")
+    for comp, shape, b, n in big_buffers(text, args.thresh)[: args.top]:
+        print(f"  {b / 1e9:7.2f} GB x{n:4d}  {shape:44s} {comp[:40]}")
+    print("== collectives (op, shape, GB each, count)")
+    for op, shape, b, n in collectives_by_shape(text)[: args.top]:
+        print(f"  {b / 1e9:7.3f} GB x{n:4d}  {op:20s} {shape[:70]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

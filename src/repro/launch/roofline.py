@@ -1,0 +1,89 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Terms (TPU v5e constants from ``mesh.HW``), all in seconds per step:
+
+    t_compute    = dot_FLOPs_global    / (chips * peak_FLOP/s)
+    t_memory     = HLO_bytes_global    / (chips * HBM_bw)
+    t_collective = collective_bytes_gl / (chips * link_bw)      [prompt form]
+    t_wire       = wire_bytes_per_dev  / link_bw                 [ring model]
+
+The per-device SPMD module gives per-device numbers; global = x chips.
+``MODEL_FLOPS`` is the useful-work floor: 6*N*D (train), 2*N*D (prefill),
+2*N*B (decode); N = active params for MoE.  ``useful_ratio`` < 1 exposes
+remat/recompute and redundant compute; ``mfu_bound`` is the MFU the step
+would achieve at the modeled bound (perfect overlap: step time =
+max(term)).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.registry import ShapeSpec
+from repro.models.config import ArchConfig
+
+from .hlo_analysis import HloAnalysis
+from .mesh import HW
+
+__all__ = ["model_flops", "roofline_terms"]
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    n = cfg.param_count(active_only=(cfg.family == "moe"))
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * b * s
+    if shape.kind == "prefill":
+        return 2.0 * n * b * s
+    return 2.0 * n * b  # decode: one token
+
+
+def roofline_terms(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    analysis: HloAnalysis,
+    chips: int,
+) -> Dict:
+    peak, hbm, ici = HW["peak_flops_bf16"], HW["hbm_bw"], HW["ici_bw"]
+    flops_dev = analysis.dot_flops
+    bytes_dev = analysis.bytes_accessed
+    coll_dev = analysis.collective_bytes
+    wire_dev = analysis.wire_bytes
+
+    t_compute = flops_dev / peak                      # == global/(chips*peak)
+    t_memory = bytes_dev / hbm
+    t_collective = coll_dev / ici
+    t_wire = wire_dev / ici
+
+    terms = {
+        "compute": t_compute,
+        "memory": t_memory,
+        "collective": t_collective,
+    }
+    bottleneck = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+
+    mf = model_flops(cfg, shape)
+    useful_ratio = mf / (flops_dev * chips) if flops_dev else 0.0
+    mfu_bound = mf / (chips * peak * t_bound) if t_bound else 0.0
+
+    return {
+        "chips": chips,
+        "per_device": {
+            "dot_flops": flops_dev,
+            "bytes_accessed": bytes_dev,
+            "collective_bytes": coll_dev,
+            "wire_bytes": wire_dev,
+        },
+        "global": {
+            "dot_flops": flops_dev * chips,
+            "bytes_accessed": bytes_dev * chips,
+            "collective_bytes": coll_dev * chips,
+        },
+        "terms_s": {**terms, "wire": t_wire},
+        "bottleneck": bottleneck,
+        "t_bound_s": t_bound,
+        "model_flops": mf,
+        "useful_ratio": useful_ratio,
+        "mfu_bound": mfu_bound,
+        "hw": HW["name"],
+    }

@@ -1,0 +1,356 @@
+"""Cell builder: (arch x shape x mesh) -> jitted step + shardings + specs.
+
+This is the single source of truth for what each of the 40 grid cells
+lowers: ``train_*`` shapes lower a full AdamW ``train_step`` (fp32 master
+params + moments, bf16 compute), ``prefill_*`` lowers the cache-building
+``prefill_step``, and ``decode_*`` / ``long_*`` lower a one-token
+``serve_step`` against a pre-allocated, sharded decode state.
+
+Everything is ShapeDtypeStruct-based — nothing allocates; the dry-run
+lowers + compiles and the roofline reads the compiled artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import SHAPES, ShapeSpec, cell_applicable, get_config
+from repro.distributed.ctx import activation_constraints
+from repro.distributed.sharding import (
+    act_pspec,
+    decode_state_specs,
+    logits_pspec,
+    named_tree,
+    partition_params,
+    train_batch_spec,
+)
+from repro.models.config import ArchConfig
+from repro.models.lm import (
+    init_decode_state,
+    init_lm,
+    lm_decode_step,
+    lm_loss,
+    lm_prefill,
+)
+from repro.models.whisper import (
+    init_whisper,
+    init_whisper_decode_state,
+    whisper_decode_step,
+    whisper_loss,
+    whisper_prefill,
+)
+from repro.train.optimizer import adamw, apply_updates, clip_by_global_norm
+
+__all__ = ["CellPlan", "build_cell", "WHISPER_S_ENC"]
+
+# Whisper's frontend stub length: ~40 s of audio at 50 frames/s (the
+# assigned seq_len applies to the decoder token stream; the encoder length
+# is fixed by the audio-window design).  See DESIGN.md §5.
+WHISPER_S_ENC = 2048
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch_id: str
+    shape: ShapeSpec
+    cfg: ArchConfig
+    kind: str                       # train | prefill | decode
+    fn: Callable                    # jit-able python callable
+    args: Tuple[Any, ...]           # ShapeDtypeStruct pytrees, positional
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    act_sharding: Any
+    logits_sharding: Any
+    mesh: Mesh
+    head_sharding: Any = None
+
+    def jitted(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        with self.mesh, activation_constraints(self.act_sharding,
+                                               self.logits_sharding,
+                                               self.head_sharding):
+            return self.jitted().lower(*self.args)
+
+
+def _sds(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def _param_shapes(cfg: ArchConfig, dtype) -> Any:
+    key = jax.random.PRNGKey(0)
+    if cfg.family == "encdec":
+        init = functools.partial(init_whisper, cfg=cfg, dtype=dtype)
+    else:
+        init = functools.partial(init_lm, cfg=cfg, dtype=dtype)
+    return _sds(jax.eval_shape(init, key))
+
+
+def _batch_shapes(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (b, WHISPER_S_ENC, cfg.d_model), jnp.bfloat16
+        )
+    return batch
+
+
+def _batch_specs(batch: Dict[str, Any], mesh: Mesh, b: int) -> Dict[str, P]:
+    return {
+        k: train_batch_spec(mesh, b, rank=len(v.shape)) for k, v in batch.items()
+    }
+
+
+def _remat_policy(cfg: ArchConfig):
+    """Full remat everywhere.  Measured (qwen2-moe train_4k):
+    ``dots_with_no_batch_dims_saveable`` RAISED the memory term (5.77 ->
+    6.68 s) and blew HBM (10.2 -> 18.1 GB live) — at fusion granularity
+    the saved dot outputs add write+read traffic that exceeds what the
+    avoided recompute re-reads.  Hypothesis refuted; knob kept for real-
+    TPU tuning where fusion granularity differs."""
+    return None
+
+
+def _loss_fn(cfg: ArchConfig):
+    policy = _remat_policy(cfg)
+
+    def loss(params, batch):
+        if cfg.family == "encdec":
+            return whisper_loss(
+                params, batch["frames"], batch["tokens"], batch["labels"], cfg
+            )
+        return lm_loss(
+            params, batch["tokens"], batch["labels"], cfg,
+            patch_embeds=batch.get("patch_embeds"),
+            remat_policy=policy,
+        )
+    return loss
+
+
+def _to_bf16(tree):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 else x, tree
+    )
+
+
+# ---------------------------------------------------------------------------
+# cell kinds
+# ---------------------------------------------------------------------------
+
+def _grad_accum_steps(cfg: ArchConfig, batch: int) -> int:
+    """Microbatch count for the big train cells: same global batch, 1/n
+    the live activations/transients per pass (grads accumulate in f32,
+    sharded like params, so the accumulator is FSDP-small).  MoE archs
+    size by ACTIVE params — their activations scale with the active set,
+    and fewer microbatches mean fewer FSDP weight re-gathers (qwen2-moe:
+    2.7B active / 14.3B total wants no accumulation at all)."""
+    n_params = cfg.param_count(active_only=(cfg.family == "moe"))
+    total = cfg.param_count()
+    n = 4 if total > 5e10 else (2 if n_params > 8e9 else 1)
+    while batch % n:
+        n //= 2
+    return max(1, n)
+
+
+def _train_cell(arch_id: str, shape: ShapeSpec, cfg: ArchConfig, mesh: Mesh) -> CellPlan:
+    params = _param_shapes(cfg, jnp.float32)
+    opt_init, opt_update = adamw(3e-4, weight_decay=0.1)
+    opt = _sds(jax.eval_shape(opt_init, params))
+    state = {"params": params, "opt": opt}
+    batch = _batch_shapes(cfg, shape)
+    n_micro = _grad_accum_steps(cfg, shape.global_batch)
+
+    loss_fn = _loss_fn(cfg)
+    state_specs = partition_params(state, mesh, n_experts=cfg.padded_experts, head_dim=cfg.hd)
+    grad_shardings = named_tree(state_specs, mesh)["params"]
+
+    def _constrain_grads(g):
+        # pin per-microbatch grads (and so the accumulator) to the param
+        # specs: otherwise XLA keeps the accumulator replicated over
+        # `data` and ALL-REDUCES full fp32 grads every microbatch (9.2 GB
+        # tuples on recurrentgemma train) instead of reduce-scattering
+        return jax.tree_util.tree_map(
+            lambda x, sh: jax.lax.with_sharding_constraint(x, sh),
+            g, grad_shardings)
+
+    def train_step(state, batch):
+        def lf(p, mb):
+            # cast to bf16 pinned to the FSDP sharding before use.
+            # (Measured no-ops on the CPU-backend dry-run — XLA already
+            # orders cast-before-gather for the big weights; kept because
+            # it makes the intent explicit and is free.)
+            pb = jax.tree_util.tree_map(
+                lambda x, sh: jax.lax.with_sharding_constraint(x, sh),
+                _to_bf16(p), grad_shardings)
+            return loss_fn(pb, mb)
+
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(lf)(state["params"], batch)
+            grads = _constrain_grads(grads)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+            zeros = _constrain_grads(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]))
+
+            def acc(carry, mb):
+                l_acc, g_acc = carry
+                l, g = jax.value_and_grad(lf)(state["params"], mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32),
+                    g_acc, _constrain_grads(g))
+                return (l_acc + l, g_acc), None
+
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / n_micro
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, opt = opt_update(grads, state["opt"], state["params"])
+        new_params = apply_updates(state["params"], updates)
+        return {"params": new_params, "opt": opt}, {"loss": loss, "gnorm": gnorm}
+    batch_specs = _batch_specs(batch, mesh, shape.global_batch)
+    metrics_specs = {"loss": P(), "gnorm": P()}
+
+    return CellPlan(
+        arch_id=arch_id, shape=shape, cfg=cfg, kind="train",
+        fn=train_step,
+        args=(state, batch),
+        in_shardings=(named_tree(state_specs, mesh),
+                      named_tree(batch_specs, mesh)),
+        out_shardings=(named_tree(state_specs, mesh),
+                       named_tree(metrics_specs, mesh)),
+        donate_argnums=(0,),
+        act_sharding=NamedSharding(
+            mesh, act_pspec(mesh, shape.global_batch, shape.seq_len)
+        ),
+        logits_sharding=NamedSharding(
+            mesh,
+            logits_pspec(mesh, shape.global_batch, shape.seq_len,
+                         cfg.padded_vocab),
+        ),
+        head_sharding=NamedSharding(
+            mesh, train_batch_spec(mesh, shape.global_batch, rank=3)
+        ),
+        mesh=mesh,
+    )
+
+
+def _prefill_cell(arch_id: str, shape: ShapeSpec, cfg: ArchConfig, mesh: Mesh) -> CellPlan:
+    params = _param_shapes(cfg, jnp.bfloat16)
+    batch = _batch_shapes(cfg, shape)
+
+    if cfg.family == "encdec":
+        def prefill_step(params, batch):
+            return whisper_prefill(params, batch["frames"], batch["tokens"], cfg)
+    else:
+        def prefill_step(params, batch):
+            return lm_prefill(params, batch["tokens"], cfg,
+                              patch_embeds=batch.get("patch_embeds"))
+
+    param_specs = partition_params(params, mesh, n_experts=cfg.padded_experts, head_dim=cfg.hd)
+    batch_specs = _batch_specs(batch, mesh, shape.global_batch)
+
+    logits_sd, state_sd = jax.eval_shape(prefill_step, params, batch)
+    state_specs = decode_state_specs(state_sd, mesh, shape.global_batch)
+    out_logits_spec = logits_pspec(mesh, shape.global_batch, 1, cfg.padded_vocab)
+
+    return CellPlan(
+        arch_id=arch_id, shape=shape, cfg=cfg, kind="prefill",
+        fn=prefill_step,
+        args=(params, batch),
+        in_shardings=(named_tree(param_specs, mesh),
+                      named_tree(batch_specs, mesh)),
+        out_shardings=(NamedSharding(mesh, out_logits_spec),
+                       named_tree(state_specs, mesh)),
+        donate_argnums=(),
+        act_sharding=NamedSharding(
+            mesh, act_pspec(mesh, shape.global_batch, shape.seq_len)
+        ),
+        logits_sharding=None,
+        head_sharding=NamedSharding(
+            mesh, train_batch_spec(mesh, shape.global_batch, rank=3)
+        ),
+        mesh=mesh,
+    )
+
+
+def _decode_cell(arch_id: str, shape: ShapeSpec, cfg: ArchConfig, mesh: Mesh,
+                 kv_int8: bool = False) -> CellPlan:
+    b, ctx = shape.global_batch, shape.seq_len
+    params = _param_shapes(cfg, jnp.bfloat16)
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+
+    if cfg.family == "encdec":
+        state = _sds(jax.eval_shape(
+            functools.partial(init_whisper_decode_state, cfg, b, ctx, WHISPER_S_ENC)
+        ))
+
+        def serve_step(params, state, token):
+            return whisper_decode_step(params, state, token, cfg)
+    else:
+        state = _sds(jax.eval_shape(
+            functools.partial(init_decode_state, cfg, b, ctx, kv_int8=kv_int8)
+        ))
+
+        def serve_step(params, state, token):
+            return lm_decode_step(params, state, token, cfg)
+
+    param_specs = partition_params(params, mesh, n_experts=cfg.padded_experts, head_dim=cfg.hd)
+    state_specs = decode_state_specs(state, mesh, b)
+    out_logits_spec = logits_pspec(mesh, b, 1, cfg.padded_vocab)
+
+    return CellPlan(
+        arch_id=arch_id, shape=shape, cfg=cfg, kind="decode",
+        fn=serve_step,
+        args=(params, state, token),
+        in_shardings=(named_tree(param_specs, mesh),
+                      named_tree(state_specs, mesh),
+                      NamedSharding(mesh, train_batch_spec(mesh, b))),
+        out_shardings=(NamedSharding(mesh, out_logits_spec),
+                       named_tree(state_specs, mesh)),
+        donate_argnums=(1,),
+        act_sharding=NamedSharding(mesh, act_pspec(mesh, b, 1)),
+        logits_sharding=NamedSharding(mesh, logits_pspec(mesh, b, 1, cfg.padded_vocab)),
+        head_sharding=NamedSharding(mesh, train_batch_spec(mesh, b, rank=3)),
+        mesh=mesh,
+    )
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh,
+               kv_int8: bool = False) -> CellPlan:
+    ok, why = cell_applicable(arch_id, shape_name)
+    if not ok:
+        raise ValueError(f"cell skipped by design: {why}")
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return _train_cell(arch_id, shape, cfg, mesh)
+    if shape.kind == "prefill":
+        return _prefill_cell(arch_id, shape, cfg, mesh)
+    return _decode_cell(arch_id, shape, cfg, mesh, kv_int8=kv_int8)

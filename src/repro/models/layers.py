@@ -1,0 +1,689 @@
+"""Shared neural layers for the architecture zoo (functional, pjit-ready).
+
+Everything is a pure function over nested-dict params so pjit/shard_map can
+shard freely.  Design notes:
+
+* **Attention** is query-chunked (lax.scan over query blocks): peak score
+  memory is (B, H, q_chunk, S) instead of (B, H, S, S), which is what makes
+  the 32k prefill shapes fit HBM.  Supports GQA, QKV-bias, per-head q/k RMS
+  norm (Qwen3), sliding windows (RecurrentGemma local attention) and
+  single-token decode against a KV cache.
+* **MoE** uses group-limited routing with a **static capacity schedule**:
+  tokens are sorted by expert, placed into a fixed (E, C) slot table, and
+  overflow/underflow become padded no-op slots — the same
+  precomputed-schedule idea as the paper's empty/extra iterations (DESIGN.md
+  §5): no dynamic shapes anywhere, compile-time-fixed dataflow.
+* **Mamba-2 (SSD)** is the chunked state-space-duality algorithm: exact
+  intra-chunk attention-form + sequential inter-chunk state pass.
+* **RG-LRU** (RecurrentGemma) uses an associative scan over the gated
+  diagonal recurrence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import (
+    constrain_expert,
+    constrain_hidden,
+    constrain_seq_gathered,
+)
+
+from .config import ArchConfig
+
+__all__ = [
+    "rms_norm", "rope", "attention", "swiglu", "moe", "mamba2_block",
+    "rglru_block", "init_attention", "init_swiglu", "init_moe",
+    "init_mamba2", "init_rglru", "init_embedding",
+]
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def init_embedding(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    vp = cfg.padded_vocab
+    p = {"tok": _dense_init(k1, (vp, cfg.d_model), scale=0.02, dtype=dtype)}
+    if not cfg.tie_embeddings:
+        p["unemb"] = _dense_init(k2, (cfg.d_model, vp), dtype=dtype)
+    return p
+
+
+def mask_vocab_pad(logits: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """-inf the padded-vocab tail so softmax/argmax never see it."""
+    vp = logits.shape[-1]
+    if vp == cfg.vocab:
+        return logits
+    valid = jnp.arange(vp) < cfg.vocab
+    return jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+def init_attention(key, cfg: ArchConfig, cross: bool = False, dtype=jnp.float32) -> Params:
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (cfg.d_model, nh * hd), dtype=dtype),
+        "wk": _dense_init(ks[1], (cfg.d_model, nkv * hd), dtype=dtype),
+        "wv": _dense_init(ks[2], (cfg.d_model, nkv * hd), dtype=dtype),
+        "wo": _dense_init(ks[3], (nh * hd, cfg.d_model), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": _dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "wu": _dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+        "wd": _dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def init_moe(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.padded_experts, cfg.d_model, cfg.d_ff
+    p = {
+        # router stays (d, n_experts): padded experts are unreachable
+        "router": _dense_init(ks[0], (d, cfg.n_experts), scale=0.02, dtype=dtype),
+        "wg": _dense_init(ks[1], (e, d, f), dtype=dtype),
+        "wu": _dense_init(ks[2], (e, d, f), dtype=dtype),
+        "wd": _dense_init(ks[3], (e, f, d), scale=1.0 / math.sqrt(f), dtype=dtype),
+    }
+    if cfg.n_shared:
+        p["shared"] = init_swiglu(ks[4], d, cfg.n_shared * cfg.d_ff, dtype=dtype)
+    return p
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    heads = d_in // cfg.ssm_head_dim
+    ks = jax.random.split(key, 4)
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return {
+        # fused in-proj -> [z (d_in), x (d_in), B (state), C (state), dt (heads)]
+        "w_in": _dense_init(ks[0], (d, 2 * d_in + 2 * cfg.ssm_state + heads), dtype=dtype),
+        "conv": _dense_init(ks[1], (cfg.ssm_conv, conv_dim), scale=0.5, dtype=dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(dtype),
+        "d_skip": jnp.ones((heads,), dtype),
+        "dt_bias": jnp.zeros((heads,), dtype),
+        "gate_norm": jnp.ones((d_in,), dtype),
+        "w_out": _dense_init(ks[2], (d_in, d), dtype=dtype),
+    }
+
+
+_RGLRU_BLOCKS = 16  # RG-LRU gate projections are block-diagonal (as in
+                    # RecurrentGemma); also keeps the gate matmuls local
+                    # per model shard (full (w, w) gates cost a 537 MB
+                    # f32 activation all-reduce per gate per layer)
+
+
+def init_rglru(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    nb = _RGLRU_BLOCKS if w % _RGLRU_BLOCKS == 0 else 1
+    wb = w // nb
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": _dense_init(ks[0], (d, w), dtype=dtype),
+        "w_gate": _dense_init(ks[1], (d, w), dtype=dtype),
+        "conv": _dense_init(ks[2], (cfg.ssm_conv, w), scale=0.5, dtype=dtype),
+        # block-diagonal input & recurrence gate projections
+        "w_r": _dense_init(ks[3], (nb, wb, wb), scale=0.02, dtype=dtype),
+        "w_i": _dense_init(ks[4], (nb, wb, wb), scale=0.02, dtype=dtype),
+        "lam": jnp.full((w,), 2.0, dtype),  # softplus(2) ~ broad decay init
+        "w_out": _dense_init(ks[5], (w, d), dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Vocab-parallel-safe cross entropy: (..., V) logits, (...) int labels.
+
+    ``take_along_axis`` over a vocab-sharded logits tensor forces XLA to
+    all-gather the full (B, S, V) buffer (observed: 39.8 GB/device on the
+    qwen1.5-0.5b train_4k dry-run).  The one-hot reduction below is
+    elementwise over V, so every term stays sharded and the only cross-
+    shard traffic is the scalar max/sum all-reduces of the logsumexp.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    one_hot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    label_logit = jnp.sum(logits * one_hot, axis=-1)
+    return lse - label_logit
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def _qk_headnorm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def attention(
+    params: Params,
+    x: jax.Array,                       # (B, S, d)
+    cfg: ArchConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Dict[str, jax.Array]] = None,   # decode: {"k","v","len"}
+    kv_x: Optional[jax.Array] = None,   # cross-attention source (B, Skv, d)
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 1024,
+    build_cache: bool = False,
+    cache_headroom: int = 0,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Query-chunked (G)QA with optional KV cache decode / cross-attn.
+
+    ``build_cache=True`` (prefill): the full-sequence path additionally
+    returns a decode-ready KV cache — full context, or the last ``window``
+    positions rotated into ring-buffer layout for local attention.
+    """
+    b, s, _ = x.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv
+    rep = nh // max(1, nkv)
+
+    q = x @ params["wq"]
+    src = kv_x if kv_x is not None else x
+    k = src @ params["wk"]
+    v = src @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, src.shape[1], nkv, hd)
+    v = v.reshape(b, src.shape[1], nkv, hd)
+    if cfg.qk_norm:
+        q = _qk_headnorm(q, params["q_norm"], cfg.norm_eps)
+        k = _qk_headnorm(k, params["k_norm"], cfg.norm_eps)
+
+    use_rope = cfg.rope_enabled and kv_x is None  # no rope on cross-attention
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # single-token decode against a pre-allocated cache.  Windowed
+        # caches are ring buffers (write at len % ctx); full caches are the
+        # special case window == ctx where the ring never wraps.
+        # int8 caches ("k_scale"/"v_scale" present) store per-(token, kv
+        # head) symmetric-quantized entries: halves cache HBM, the decode
+        # bottleneck (serve memory term == step latency).
+        if use_rope:
+            k = rope(k, positions, cfg.rope_theta)
+        quant = "k_scale" in cache
+        ctx = cache["k"].shape[1]
+        idx = cache["len"]
+        write = jax.lax.rem(idx, ctx)
+
+        def _wr(buf, val):
+            return jax.lax.dynamic_update_slice(
+                buf, val.astype(buf.dtype), (0, write) + (0,) * (buf.ndim - 2))
+
+        if quant:
+            ks = jnp.maximum(jnp.abs(k).max(-1), 1e-8) / 127.0   # (b, s, nkv)
+            vs_ = jnp.maximum(jnp.abs(v).max(-1), 1e-8) / 127.0
+            ck = _wr(cache["k"], jnp.round(k / ks[..., None]))
+            cv = _wr(cache["v"], jnp.round(v / vs_[..., None]))
+            cks = _wr(cache["k_scale"], ks)
+            cvs = _wr(cache["v_scale"], vs_)
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                         "len": idx + s}
+            k_eff = ck.astype(x.dtype) * cks.astype(x.dtype)[..., None]
+            v_eff = cv.astype(x.dtype) * cvs.astype(x.dtype)[..., None]
+        else:
+            ck = _wr(cache["k"], k)
+            cv = _wr(cache["v"], v)
+            new_cache = {"k": ck, "v": cv, "len": idx + s}
+            k_eff, v_eff = ck, cv
+        kpos = jnp.arange(ctx)
+        valid = kpos[None, :] < jnp.minimum(idx + s, ctx)  # (1, ctx)
+        qh = q.reshape(b, s, nkv, rep, hd)
+        scores = jnp.einsum("bsgrh,bcgh->bgrsc", qh, k_eff) / math.sqrt(hd)
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+        out = jnp.einsum("bgrsc,bcgh->bsgrh", probs, v_eff).reshape(b, s, nh * hd)
+        return out @ params["wo"], new_cache
+
+    # full (training / prefill) path
+    if use_rope:
+        k = rope(k, positions, cfg.rope_theta)
+    skv = k.shape[1]
+    if not window:
+        # ---- online-softmax over KV chunks (flash-style dataflow) ----
+        # q never gets sliced (it stays sequence-sharded; slicing a
+        # sharded dim with a loop-variable offset costs a full-scores
+        # all-reduce per chunk), k/v are gathered once per layer, and
+        # the running (max, denom, acc) carries keep peak score memory
+        # at (B, S_local, kv_chunk).
+        k = constrain_seq_gathered(k)
+        v = constrain_seq_gathered(v)
+        kv_chunk = min(1024, skv)
+        pad_kv = (-skv) % kv_chunk
+        if pad_kv:
+            k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        nkc = (skv + pad_kv) // kv_chunk
+        qh = q.reshape(b, s, nkv, rep, hd)
+        qpos = positions[0] if positions.ndim > 1 else positions  # (S,)
+
+        def kv_step(carry, idx):
+            m, l, acc = carry
+            ks = jax.lax.dynamic_slice_in_dim(k, idx * kv_chunk, kv_chunk, 1)
+            vs = jax.lax.dynamic_slice_in_dim(v, idx * kv_chunk, kv_chunk, 1)
+            sc = jnp.einsum("bsgrh,bcgh->bgrsc", qh, ks) / math.sqrt(hd)
+            sc = sc.astype(jnp.float32)
+            kpos = idx * kv_chunk + jnp.arange(kv_chunk)
+            valid = kpos[None, :] < skv
+            if causal:
+                valid = valid & (kpos[None, :] <= qpos[:, None])
+            sc = jnp.where(valid[None, None, None], sc, -jnp.inf)
+            m_new = jnp.maximum(m, sc.max(-1))
+            # all-masked rows keep m = -inf; shift by a finite max instead
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(sc - m_safe[..., None])
+            scale = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            scale = jnp.where(jnp.isfinite(m), scale, 0.0)
+            l_new = l * scale + p.sum(-1)
+            pv = jnp.einsum("bgrsc,bcgh->bsgrh", p.astype(x.dtype), vs)
+            acc_new = acc * jnp.moveaxis(scale, 3, 1)[..., None, None] \
+                .reshape(b, s, nkv, rep, 1) + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, nkv, rep, s), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, nkv, rep, s), jnp.float32)
+        a0 = jnp.zeros((b, s, nkv, rep, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nkc))
+        denom = jnp.moveaxis(jnp.maximum(l, 1e-30), 3, 1).reshape(
+            b, s, nkv, rep, 1)
+        out = (acc / denom).astype(x.dtype).reshape(b, s, nh * hd)
+        new_cache = None
+        if build_cache:
+            pad = ((0, 0), (0, cache_headroom), (0, 0), (0, 0))
+            kc = jnp.pad(k[:, :skv], pad)
+            vc = jnp.pad(v[:, :skv], pad)
+            new_cache = {"k": kc, "v": vc, "len": jnp.asarray(s, jnp.int32)}
+        return out @ params["wo"], new_cache
+
+    if window:
+        # windowed layers gain nothing from big query chunks; smaller
+        # chunks shrink the (qc x band) scores buffer proportionally
+        q_chunk = min(q_chunk, max(256, window // 4))
+    n_chunks = max(1, -(-s // q_chunk))
+    pad = n_chunks * q_chunk - s
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qh = qp.reshape(b, n_chunks, q_chunk, nkv, rep, hd)
+    # banded local attention: a window-w causal query chunk only sees K/V
+    # in [chunk_start - w, chunk_end) — slice instead of scoring the full
+    # sequence (O(S*w) instead of O(S^2): 10x compute on the 32k prefill).
+    # Only engage when the band is a real saving (>= 2x): the slice's
+    # backward is a per-chunk scatter-add that costs memory on short
+    # sequences where the band ~= the full length.
+    band = q_chunk + window if (window and causal) else skv
+    band = band if band * 2 <= skv else skv
+    band = min(band, skv)
+
+    def chunk_fn(carry, inputs):
+        qc, c_idx = inputs  # (B, qc, nkv, rep, hd), scalar
+        qpos = c_idx * q_chunk + jnp.arange(q_chunk)
+        if band < skv:
+            start = jnp.clip(c_idx * q_chunk - window, 0, skv - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, band, 1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, band, 1)
+            kpos = start + jnp.arange(band)
+        else:
+            kc, vc = k, v
+            kpos = jnp.arange(skv)
+        scores = jnp.einsum("bsgrh,bcgh->bgrsc", qc, kc) / math.sqrt(hd)
+        mask = jnp.ones((q_chunk, band), bool)
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+        out = jnp.einsum("bgrsc,bcgh->bsgrh", probs, vc)
+        return carry, out
+
+    _, outs = jax.lax.scan(
+        chunk_fn, None,
+        (jnp.moveaxis(qh, 1, 0), jnp.arange(n_chunks)),
+    )  # (n_chunks, B, qc, nkv, rep, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, n_chunks * q_chunk, nh * hd)[:, :s]
+    new_cache = None
+    if build_cache:
+        if window and window < s:
+            # ring-buffer layout: position p lives at slot p % window
+            kc = jnp.roll(k[:, -window:], s % window, axis=1)
+            vc = jnp.roll(v[:, -window:], s % window, axis=1)
+        else:
+            # headroom: room for generated tokens before the ring wraps
+            pad = ((0, 0), (0, cache_headroom), (0, 0), (0, 0))
+            kc, vc = jnp.pad(k, pad), jnp.pad(v, pad)
+        new_cache = {"k": kc, "v": vc, "len": jnp.asarray(s, jnp.int32)}
+    return out @ params["wo"], new_cache
+
+
+def swiglu(params: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ params["wg"]) * (x @ params["wu"])) @ params["wd"]
+
+
+# ---------------------------------------------------------------------------
+# MoE with static-capacity schedule (paper's precomputed-schedule idea)
+# ---------------------------------------------------------------------------
+
+def moe(params: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Block-local top-k routing with a static (E, C) slot table.
+
+    Routing groups are fixed ``moe_block``-token blocks (group-limited
+    routing): the argsort/capacity bookkeeping never crosses a block, so
+    with block size <= the sequence-shard size the whole dispatch stays
+    local to each (data, model) shard — no all-gather of the sequence and
+    no global sort buffers (observed 31.6 GB/device on qwen2-moe train_4k
+    with whole-sequence routing).  Overflow tokens are dropped
+    (capacity_factor slack) and unfilled slots are explicit no-op pads —
+    static shapes everywhere, the paper's precomputed-schedule idea.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    e_pad = cfg.padded_experts       # routing never reaches [e, e_pad):
+                                     # their slots are explicit no-op work,
+                                     # the paper's 'extra iterations'
+    blk = cfg.moe_block if (cfg.moe_block and s % cfg.moe_block == 0) else s
+    nb = s // blk
+    cap = int(math.ceil(blk * k / e * cfg.capacity_factor))
+    cap = max(cap, k)
+
+    nk = blk * k
+    xb = x.reshape(b, nb, blk, d)
+
+    # --- routing (index-space only; everything batched over (b, nb)) ---
+    logits = xb @ params["router"]                      # (b, nb, blk, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    top_p, top_ids = jax.lax.top_k(probs, k)            # (b, nb, blk, k)
+    top_p = (top_p / (top_p.sum(-1, keepdims=True) + 1e-9)).astype(x.dtype)
+    ids = top_ids.reshape(b, nb, nk)                    # copy -> expert
+    sel = jax.nn.one_hot(ids, e, dtype=jnp.int32)       # (b, nb, nk, E)
+    # FIFO capacity: copy position within its expert = exclusive prefix sum
+    pos = ((jnp.cumsum(sel, axis=-2) - 1) * sel).sum(-1)  # (b, nb, nk)
+    slot = jnp.where(pos < cap, ids * cap + pos, e * cap)
+
+    # --- DENSE one-hot dispatch (mesh-TF style), TOKEN-level ---
+    # gather/scatter dispatch made XLA materialize u32 scatter indices
+    # broadcast over d (26.8 GB buffers on llama4-scout train); einsum
+    # dispatch is pure MXU work (<1% of expert FLOPs) and — exactly like
+    # the paper's precomputed schedule — a fixed dataflow whose dropped /
+    # unfilled slots are explicit no-ops.  The dispatch matrices are
+    # TOKEN x slot (one-hots summed over the k copies): a copy-level
+    # formulation repeats activations k-fold and cost 155 GB/dev of
+    # dispatch-tensor gathers on qwen2-moe train (top-4).
+    n_slots = e_pad * cap
+    slot_tok = slot.reshape(b, nb, blk, k)
+    disp = sum(jax.nn.one_hot(slot_tok[..., i], n_slots + 1,
+                              dtype=x.dtype)[..., :-1] for i in range(k))
+    gathered = jnp.einsum("bnts,bntd->bnsd", disp, xb)
+    gathered = gathered.reshape(b, nb, e_pad, cap, d)
+    # anchor: expert dim -> model axis (EP); keeps e-sharded weights local
+    gathered = constrain_expert(gathered, 2)
+
+    h = jax.nn.silu(jnp.einsum("bnecd,edf->bnecf", gathered, params["wg"]))
+    h = h * jnp.einsum("bnecd,edf->bnecf", gathered, params["wu"])
+    y = jnp.einsum("bnecf,efd->bnecd", h, params["wd"])
+    y = constrain_expert(y, 2).reshape(b, nb, n_slots, d)
+
+    # combine: router-weighted one-hots in one token x slot matrix
+    disp_w = sum(top_p[..., i, None] * jax.nn.one_hot(
+        slot_tok[..., i], n_slots + 1, dtype=x.dtype)[..., :-1]
+        for i in range(k))
+    out = jnp.einsum("bnts,bnsd->bntd", disp_w, y).reshape(b, s, d)
+    if cfg.n_shared:
+        out = out + swiglu(params["shared"], x)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD, chunked)
+# ---------------------------------------------------------------------------
+
+def _ssd_chunked(xh, dt, a_log, bmat, cmat, chunk: int):
+    """Chunked state-space duality.
+
+    xh: (B, S, H, P) inputs per head; dt: (B, S, H) positive step sizes;
+    a_log: (H,) (A = -exp(a_log)); bmat/cmat: (B, S, N) shared across heads.
+    Returns y: (B, S, H, P).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, (s, chunk)
+    a = -jnp.exp(a_log.astype(jnp.float32))                 # (H,)
+    dta = dt.astype(jnp.float32) * a                        # (B, S, H) negative
+    x_ = xh.reshape(b, nc, chunk, h, p)
+    dt_ = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    dta_ = dta.reshape(b, nc, chunk, h)
+    b_ = bmat.reshape(b, nc, chunk, n)
+    c_ = cmat.reshape(b, nc, chunk, n)
+
+    cum = jnp.cumsum(dta_, axis=2)                          # (B, nc, Q, H)
+    # intra-chunk: y_intra[t] = sum_{u<=t} C_t B_u^T exp(cum_t - cum_u) dt_u x_u
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: exp of the (positive) upper triangle overflows to
+    # inf and where(tri, inf, 0) back-propagates NaN
+    gate = jnp.exp(jnp.where(tri[None, None, :, :, None], decay, -jnp.inf))
+    cb = jnp.einsum("bqtn,bqun->bqtu", c_, b_)              # (B,nc,Q,Q)
+    w = cb[..., None] * gate * dt_[:, :, None, :, :]        # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bqtuh,bquhp->bqthp", w.astype(xh.dtype), x_)
+
+    # chunk-final states: S_c = sum_u exp(cum_Q - cum_u) dt_u B_u x_u^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,nc,Q,H)
+    sb = b_[..., None, :] * (decay_to_end * dt_)[..., None]  # (B,nc,Q,H,N)
+    states = jnp.einsum("bquhn,bquhp->bqhnp", sb.astype(xh.dtype), x_)
+
+    # inter-chunk recurrence over nc (sequential; nc is small)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (B,nc,H)
+
+    def scan_fn(hprev, inp):
+        st, dec = inp                                        # (B,H,N,P), (B,H)
+        hnew = hprev * dec[..., None, None].astype(xh.dtype) + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, n, p), xh.dtype)
+    h_final, hprevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )  # (nc, B, H, N, P) = state entering each chunk
+    hprevs = jnp.moveaxis(hprevs, 0, 1)
+
+    # inter-chunk contribution: y_inter[t] = C_t h_prev * exp(cum_t)
+    in_decay = jnp.exp(cum)                                  # (B,nc,Q,H)
+    y_inter = jnp.einsum(
+        "bqtn,bqhnp->bqthp", c_.astype(xh.dtype), hprevs
+    ) * in_decay[..., None].astype(xh.dtype)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, h_final
+
+
+def mamba2_block(
+    params: Params,
+    x: jax.Array,                 # (B, S, d)
+    cfg: ArchConfig,
+    state: Optional[Dict[str, jax.Array]] = None,  # decode state
+    build_state: bool = False,    # prefill: also return the decode state
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    heads = d_in // cfg.ssm_head_dim
+    p_dim = cfg.ssm_head_dim
+    n = cfg.ssm_state
+
+    zxbcdt = x @ params["w_in"]
+    z, xs, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    dt = jax.nn.softplus(dt + params["dt_bias"])             # (B, S, H)
+
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)     # (B, S, conv_dim)
+    if state is None:
+        # causal depthwise conv via padding
+        pad = jnp.pad(conv_in, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0)))
+        conv = sum(
+            pad[:, i : i + s] * params["conv"][i] for i in range(cfg.ssm_conv)
+        )
+        conv = jax.nn.silu(conv)
+        xs, bmat, cmat = jnp.split(conv, [d_in, d_in + n], axis=-1)
+        xh = xs.reshape(b, s, heads, p_dim)
+        # chunk must divide S; fall back to the largest divisor (exact,
+        # just less parallel) for ragged sequence lengths
+        chunk = cfg.ssm_chunk
+        if s % chunk:
+            chunk = max(c for c in range(1, min(s, chunk) + 1) if s % c == 0)
+        y, h_final = _ssd_chunked(xh, dt, params["a_log"], bmat, cmat, chunk)
+        y = y + params["d_skip"][:, None] * xh
+        new_state = None
+        if build_state:
+            new_state = {
+                "conv": conv_in[:, -cfg.ssm_conv:],
+                "ssm": h_final.astype(x.dtype),
+            }
+    else:
+        # single-token decode: roll conv buffer, one recurrence step
+        buf = jnp.concatenate([state["conv"][:, 1:], conv_in], axis=1)
+        conv = jax.nn.silu(jnp.einsum("bts,ts->bs", buf, params["conv"]))[:, None]
+        xs, bmat, cmat = jnp.split(conv, [d_in, d_in + n], axis=-1)
+        xh = xs.reshape(b, 1, heads, p_dim)[:, 0]            # (B, H, P)
+        a = -jnp.exp(params["a_log"].astype(jnp.float32))
+        dec = jnp.exp(dt[:, 0].astype(jnp.float32) * a)      # (B, H)
+        ssm = state["ssm"]                                   # (B, H, N, P)
+        upd = (dt[:, 0][..., None, None] * bmat[:, 0, None, :, None].astype(jnp.float32)
+               * xh[:, :, None, :].astype(jnp.float32))
+        ssm = ssm * dec[..., None, None].astype(ssm.dtype) + upd.astype(ssm.dtype)
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(ssm.dtype), ssm)
+        y = (y + params["d_skip"][:, None] * xh)[:, None]    # (B, 1, H, P)
+        new_state = {"conv": buf, "ssm": ssm}
+
+    y = y.reshape(b, s, d_in)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    return y @ params["w_out"], new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma recurrent block)
+# ---------------------------------------------------------------------------
+
+_C_RGLRU = 8.0
+
+
+def rglru_block(
+    params: Params,
+    x: jax.Array,                 # (B, S, d)
+    cfg: ArchConfig,
+    state: Optional[Dict[str, jax.Array]] = None,
+    build_state: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, s, d = x.shape
+    w = cfg.lru_width or d
+    gate = constrain_hidden(jax.nn.gelu(x @ params["w_gate"]))  # (B, S, w)
+    xs = constrain_hidden(x @ params["w_x"])
+
+    if state is None:
+        pad = jnp.pad(xs, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0)))
+        xc = sum(pad[:, i : i + s] * params["conv"][i] for i in range(cfg.ssm_conv))
+    else:
+        buf = jnp.concatenate([state["conv"][:, 1:], xs], axis=1)
+        xc = jnp.einsum("bts,ts->bs", buf, params["conv"])[:, None]
+
+    nb, wb, _ = params["w_r"].shape
+    xg = xc.reshape(b, s, nb, wb)
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsgi,gij->bsgj", xg, params["w_r"]).reshape(b, s, w))
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsgi,gij->bsgj", xg, params["w_i"]).reshape(b, s, w))
+    log_a = -_C_RGLRU * r * jax.nn.softplus(params["lam"])   # (B, S, w) <= 0
+    a = jnp.exp(log_a.astype(jnp.float32))
+    gated_x = i * xc
+    beta = jnp.sqrt(jnp.clip(1.0 - a**2, 1e-9, None)).astype(x.dtype)
+
+    if state is None:
+        # h_t = a_t h_{t-1} + beta_t (i_t x_t), evaluated CHUNKED: a global
+        # associative_scan over (B, S, w) in f32 materializes O(log S)
+        # full-sequence temporaries and forces the sharded S axis to
+        # gather (observed 72 GB/device on recurrentgemma-9b train_4k).
+        # Within-chunk scans stay local to each sequence shard; only the
+        # (B, nc, w) chunk-boundary states cross shards.
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        chunk = 256
+        if s % chunk:
+            chunk = max(c for c in range(1, min(s, chunk) + 1) if s % c == 0)
+        nc = s // chunk
+        a_ = a.reshape(b, nc, chunk, w)                       # f32
+        bx = (beta * gated_x).astype(jnp.float32).reshape(b, nc, chunk, w)
+        a_cum, h_local = jax.lax.associative_scan(
+            combine, (a_, bx), axis=2)                        # within chunk
+
+        def carry(h_in, inp):                                  # over chunks
+            a_last, h_last = inp                               # (B, w)
+            return a_last * h_in + h_last, h_in
+
+        _, h_ins = jax.lax.scan(
+            carry, jnp.zeros((b, w), jnp.float32),
+            (jnp.moveaxis(a_cum[:, :, -1], 1, 0),
+             jnp.moveaxis(h_local[:, :, -1], 1, 0)))
+        h_ins = jnp.moveaxis(h_ins, 0, 1)                      # (B, nc, w)
+        h = (h_local + a_cum * h_ins[:, :, None, :]).reshape(b, s, w)
+        h = constrain_hidden(h.astype(x.dtype))
+        new_state = None
+        if build_state:
+            new_state = {"conv": xs[:, -cfg.ssm_conv:], "lru": h[:, -1]}
+    else:
+        h = (a[:, 0].astype(x.dtype) * state["lru"] + beta[:, 0] * gated_x[:, 0])[:, None]
+        new_state = {"conv": buf, "lru": h[:, 0]}
+
+    return (h * gate) @ params["w_out"], new_state

@@ -1,0 +1,409 @@
+"""Decoder LM assembly for dense / MoE / SSM / hybrid / VLM families.
+
+Layers are **stacked and scanned** (params carry a leading (L, ...) axis,
+``jax.lax.scan`` over layers with ``jax.checkpoint`` on the body): one
+layer's HLO is compiled once regardless of depth — the difference between
+minutes and hours for the 48-layer dry-runs — and remat keeps activation
+memory at O(one layer).
+
+Decode uses a pre-allocated KV cache (attention), rolling conv+SSM state
+(mamba2) or conv+LRU state (RG-LRU), all stacked over layers and threaded
+through the same scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain_acts, constrain_head, constrain_logits
+
+from .config import ArchConfig
+from .layers import (
+    attention,
+    init_attention,
+    init_embedding,
+    init_mamba2,
+    init_moe,
+    init_rglru,
+    init_swiglu,
+    mamba2_block,
+    mask_vocab_pad,
+    moe,
+    rglru_block,
+    rms_norm,
+    softmax_cross_entropy,
+    swiglu,
+)
+
+__all__ = [
+    "init_lm",
+    "lm_forward",
+    "lm_loss",
+    "lm_prefill",
+    "init_decode_state",
+    "lm_decode_step",
+]
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, kind: str, dtype) -> Params:
+    """One layer's params.
+    kind: attn_mlp | attn_moe | ssm | rglru_mlp | hybrid_group."""
+    if kind == "hybrid_group":
+        # one scanned unit = (rglru, rglru, local-attn): stacking the
+        # REPEATING GROUP keeps the hybrid model in a single long scan
+        # (25 fragmented 1-2 layer stacks made every stack's grads
+        # materialize at full f32 size — 9.9 GB of unsharded weight-grad
+        # carries on recurrentgemma train)
+        kb = jax.random.split(key, cfg.hybrid_period)
+        subs = ["rglru_mlp"] * (cfg.hybrid_period - 1) + ["attn_mlp"]
+        return {f"b{i}": _init_block(kb[i], cfg, sk, dtype)
+                for i, sk in enumerate(subs)}
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Params = {"norm1": jnp.ones((d,), dtype), "norm2": jnp.ones((d,), dtype)}
+    if kind == "attn_mlp":
+        p["attn"] = init_attention(k1, cfg, dtype=dtype)
+        p["mlp"] = init_swiglu(k2, d, cfg.d_ff, dtype=dtype)
+    elif kind == "attn_moe":
+        p["attn"] = init_attention(k1, cfg, dtype=dtype)
+        p["moe"] = init_moe(k2, cfg, dtype=dtype)
+    elif kind == "ssm":
+        p.pop("norm2")
+        p["ssm"] = init_mamba2(k1, cfg, dtype=dtype)
+    elif kind == "rglru_mlp":
+        p["rglru"] = init_rglru(k1, cfg, dtype=dtype)
+        p["mlp"] = init_swiglu(k2, d, cfg.d_ff, dtype=dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _layer_kinds(cfg: ArchConfig) -> Tuple[str, ...]:
+    if cfg.family == "moe":
+        return ("attn_moe",) * cfg.n_layers
+    if cfg.family == "ssm":
+        return ("ssm",) * cfg.n_layers
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.hybrid_period
+        tail = cfg.n_layers - n_groups * cfg.hybrid_period
+        return ("hybrid_group",) * n_groups + ("rglru_mlp",) * tail
+    return ("attn_mlp",) * cfg.n_layers  # dense / vlm
+
+
+def init_lm(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    kinds = _layer_kinds(cfg)
+    k_emb, k_layers = jax.random.split(key)
+    params: Params = {
+        "emb": init_embedding(k_emb, cfg, dtype=dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    # one stacked param tree per run of identical layer kinds; the (kind,
+    # count) layout itself is static structure derived from cfg via
+    # _stack_layout, NOT stored in params (strings can't be pytree leaves
+    # under jit)
+    stacks = []
+    keys = jax.random.split(k_layers, len(kinds))
+    off = 0
+    for kind, count in _stack_layout(cfg):
+        ks = keys[off : off + count]
+        off += count
+        stacks.append(jax.vmap(lambda k: _init_block(k, cfg, kind, dtype))(ks))
+    params["stacks"] = stacks
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block_apply(cfg: ArchConfig, kind: str, p: Params, x, state, layer_in_stack,
+                 build_state: bool = False, cache_headroom: int = 0):
+    """One layer forward; state is None (train) or the layer's decode state.
+    ``build_state`` (prefill) makes the stateless path also emit a
+    decode-ready state."""
+    if kind == "hybrid_group":
+        subs = ["rglru_mlp"] * (cfg.hybrid_period - 1) + ["attn_mlp"]
+        new_states = {}
+        for i, sk in enumerate(subs):
+            sub_state = None if state is None else state[f"s{i}"]
+            x, ns = _block_apply(cfg, sk, p[f"b{i}"], x, sub_state, 0,
+                                 build_state=build_state,
+                                 cache_headroom=cache_headroom)
+            new_states[f"s{i}"] = ns
+        return x, (new_states if (state is not None or build_state) else None)
+    window = cfg.window
+    if kind in ("attn_mlp", "attn_moe"):
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        cache = None if state is None else state
+        positions = None
+        if cache is not None:
+            positions = cache["len"] + jnp.arange(x.shape[1])[None, :]
+        a, new_cache = attention(
+            p["attn"], h, cfg, cache=cache, positions=positions,
+            causal=True, window=window, build_cache=build_state,
+            cache_headroom=cache_headroom,
+        )
+        x = x + a
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        ff = moe(p["moe"], h, cfg) if kind == "attn_moe" else swiglu(p["mlp"], h)
+        return x + ff, new_cache
+    if kind == "ssm":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        y, new_state = mamba2_block(p["ssm"], h, cfg, state=state,
+                                    build_state=build_state)
+        return x + y, new_state
+    if kind == "rglru_mlp":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        y, new_state = rglru_block(p["rglru"], h, cfg, state=state,
+                                   build_state=build_state)
+        x = x + y
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        return x + swiglu(p["mlp"], h), new_state
+    raise ValueError(kind)
+
+
+def _backbone(
+    params: Params,
+    tokens: jax.Array,
+    cfg: ArchConfig,
+    patch_embeds: Optional[jax.Array],
+    remat: bool = True,
+    remat_policy=None,
+) -> jax.Array:
+    """Embedding -> layer stacks -> final norm; (B, S, d) pre-unembedding,
+    sequence-replicated (constrain_head)."""
+    x = params["emb"]["tok"][tokens]
+    if cfg.family == "vlm":
+        assert patch_embeds is not None, "vlm needs stub patch embeddings"
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    x = constrain_acts(x)
+
+    for stack_params, (kind, _count) in zip(params["stacks"], _stack_layout(cfg)):
+
+        def body(h, layer_p, kind=kind):
+            out, _ = _block_apply(cfg, kind, layer_p, h, None, 0)
+            return constrain_acts(out), None
+
+        body_fn = (jax.checkpoint(body, policy=remat_policy)
+                   if remat else body)
+        x, _ = jax.lax.scan(body_fn, x, stack_params)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.family == "vlm":
+        x = x[:, patch_embeds.shape[1] :]  # logits over text positions
+    return constrain_head(x)
+
+
+def _unemb(params: Params) -> jax.Array:
+    unemb = params["emb"].get("unemb")
+    if unemb is None:
+        unemb = params["emb"]["tok"].T
+    return unemb
+
+
+def lm_forward(
+    params: Params,
+    tokens: jax.Array,                      # (B, S) int32
+    cfg: ArchConfig,
+    patch_embeds: Optional[jax.Array] = None,  # (B, P, d) VLM stub frontend
+    remat: bool = True,
+) -> jax.Array:
+    x = _backbone(params, tokens, cfg, patch_embeds, remat)
+    return constrain_logits(mask_vocab_pad(x @ _unemb(params), cfg))
+
+
+def lm_loss(
+    params: Params,
+    tokens: jax.Array,
+    labels: jax.Array,
+    cfg: ArchConfig,
+    patch_embeds: Optional[jax.Array] = None,
+    ce_chunk: int = 256,
+    remat_policy=None,
+) -> jax.Array:
+    """Chunked cross entropy: the unembedding matmul + CE are evaluated
+    per ``ce_chunk`` positions under remat, so only one (B, chunk, V/tp)
+    fp32 logits block is ever live (a monolithic (B, S, V/tp) fp32 logits
+    + softmax + grad set was ~10 GB/device on the qwen train cells)."""
+    x = _backbone(params, tokens, cfg, patch_embeds,
+                  remat_policy=remat_policy)
+    unemb = _unemb(params)
+    b, s, d = x.shape
+    chunk = ce_chunk if (ce_chunk and s % ce_chunk == 0) else s
+    nc = s // chunk
+
+    def body(acc, inp):
+        xc, lc = inp                               # (B, chunk, d), (B, chunk)
+        logits = mask_vocab_pad(xc @ unemb, cfg)
+        return acc + softmax_cross_entropy(logits, lc).sum(), None
+
+    xcs = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    lcs = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32),
+                            (xcs, lcs))
+    return total / (b * s)
+
+
+def lm_prefill(
+    params: Params,
+    tokens: jax.Array,                      # (B, S) int32
+    cfg: ArchConfig,
+    patch_embeds: Optional[jax.Array] = None,
+    cache_headroom: int = 0,
+):
+    """Prefill: full causal forward that also materializes decode state.
+
+    Returns ``(last_logits (B, 1, V), states)`` where ``states`` matches
+    :func:`init_decode_state` layout (KV caches hold exactly the prefill
+    context; windowed caches are ring-rotated; SSM/LRU states are the
+    post-sequence recurrent states).
+    """
+    x = params["emb"]["tok"][tokens]
+    if cfg.family == "vlm":
+        assert patch_embeds is not None, "vlm needs stub patch embeddings"
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    x = constrain_acts(x)
+
+    states = []
+    for stack_params, (kind, _count) in zip(params["stacks"], _stack_layout(cfg)):
+
+        def body(h, layer_p, kind=kind):
+            out, st = _block_apply(cfg, kind, layer_p, h, None, 0,
+                                   build_state=True,
+                                   cache_headroom=cache_headroom)
+            return constrain_acts(out), st
+
+        x, st = jax.lax.scan(jax.checkpoint(body), x, stack_params)
+        if kind in ("attn_mlp", "attn_moe"):
+            st = {"k": st["k"], "v": st["v"], "len": st["len"][0]}
+        states.append(st)
+
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    x = constrain_head(x)
+    unemb = params["emb"].get("unemb")
+    if unemb is None:
+        unemb = params["emb"]["tok"].T
+    return mask_vocab_pad(x @ unemb, cfg), states
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, batch: int, ctx: int, dtype=jnp.bfloat16,
+                      kv_int8: bool = False):
+    """Pre-allocated decode state per stack (stacked over layers).
+
+    ``kv_int8``: store K/V symmetric-quantized per (token, kv-head) with
+    fp32 scales — halves the cache footprint and HBM traffic of decode
+    (the serve-step bottleneck)."""
+    states = []
+    for kind, count in _stack_layout(cfg):
+        if kind in ("attn_mlp", "attn_moe"):
+            eff_ctx = min(ctx, cfg.window) if cfg.window else ctx
+            shape = (count, batch, eff_ctx, cfg.n_kv, cfg.hd)
+            kv = {
+                "k": jnp.zeros(shape, jnp.int8 if kv_int8 else dtype),
+                "v": jnp.zeros(shape, jnp.int8 if kv_int8 else dtype),
+                "len": jnp.zeros((), jnp.int32),
+            }
+            if kv_int8:
+                kv["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+                kv["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+            states.append(kv)
+        elif kind == "ssm":
+            d_in = cfg.ssm_expand * cfg.d_model
+            heads = d_in // cfg.ssm_head_dim
+            conv_dim = d_in + 2 * cfg.ssm_state
+            states.append({
+                "conv": jnp.zeros((count, batch, cfg.ssm_conv, conv_dim), dtype),
+                "ssm": jnp.zeros(
+                    (count, batch, heads, cfg.ssm_state, cfg.ssm_head_dim), dtype
+                ),
+            })
+        elif kind == "rglru_mlp":
+            w = cfg.lru_width or cfg.d_model
+            states.append({
+                "conv": jnp.zeros((count, batch, cfg.ssm_conv, w), dtype),
+                "lru": jnp.zeros((count, batch, w), dtype),
+            })
+        elif kind == "hybrid_group":
+            w = cfg.lru_width or cfg.d_model
+            eff_ctx = min(ctx, cfg.window) if cfg.window else ctx
+            group = {}
+            for i in range(cfg.hybrid_period - 1):
+                group[f"s{i}"] = {
+                    "conv": jnp.zeros((count, batch, cfg.ssm_conv, w), dtype),
+                    "lru": jnp.zeros((count, batch, w), dtype),
+                }
+            group[f"s{cfg.hybrid_period - 1}"] = {
+                "k": jnp.zeros((count, batch, eff_ctx, cfg.n_kv, cfg.hd), dtype),
+                "v": jnp.zeros((count, batch, eff_ctx, cfg.n_kv, cfg.hd), dtype),
+                # per-layer lens thread through the decode scan as xs/ys
+                "len": jnp.zeros((count,), jnp.int32),
+            }
+            states.append(group)
+    return states
+
+
+def _stack_layout(cfg: ArchConfig):
+    kinds = _layer_kinds(cfg)
+    segs = []
+    for kind in kinds:
+        if segs and segs[-1][0] == kind:
+            segs[-1][1] += 1
+        else:
+            segs.append([kind, 1])
+    return [(k, c) for k, c in segs]
+
+
+def lm_decode_step(
+    params: Params,
+    states,
+    token: jax.Array,       # (B, 1) int32
+    cfg: ArchConfig,
+):
+    """One decode step: returns (logits (B, 1, V), new_states)."""
+    x = constrain_acts(params["emb"]["tok"][token])
+    new_states = []
+    for stack_params, state, (kind, _count) in zip(
+        params["stacks"], states, _stack_layout(cfg)
+    ):
+        # thread per-layer state through the scan as xs/ys
+        if kind in ("attn_mlp", "attn_moe"):
+            per_layer = {k2: v2 for k2, v2 in state.items() if k2 != "len"}
+            shared_len = state["len"]
+
+            def body_kv(h, xs, kind=kind, shared_len=shared_len):
+                layer_p, st = xs
+                cache = {**st, "len": shared_len}
+                out, nc = _block_apply(cfg, kind, layer_p, h, cache, 0)
+                return out, {k2: nc[k2] for k2 in st}
+
+            x, new_kv = jax.lax.scan(body_kv, x, (stack_params, per_layer))
+            new_states.append({**new_kv, "len": shared_len + token.shape[1]})
+        else:
+
+            def body(h, xs, kind=kind):
+                layer_p, layer_state = xs
+                out, new_state = _block_apply(cfg, kind, layer_p, h, layer_state, 0)
+                return out, new_state
+
+            x, new_state = jax.lax.scan(body, x, (stack_params, state))
+            new_states.append(new_state)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x = constrain_head(x)
+    unemb = params["emb"].get("unemb")
+    if unemb is None:
+        unemb = params["emb"]["tok"].T
+    return constrain_logits(mask_vocab_pad(x @ unemb, cfg)), new_states

@@ -1,0 +1,235 @@
+"""The paper's 5-layer SNN classifier (Fig. 7, shapes fixed by Table II).
+
+    input (T, 2, 128) binary sigma-delta frames
+      Conv1 k=11,  2->16, same pad  + LIF -> MaxPool2
+      Conv2 k=11, 16->32, same pad  + LIF -> MaxPool2
+      Conv3 k=5,  32->64, same pad  + LIF -> MaxPool2
+      FC1   1024 -> 128 (weight-mask method) + LIF
+      FC2    128 -> 11
+    readout: sum over T of FC2 input currents ("current_sum", default) or
+             FC2 LIF spike counts ("spike_count").
+
+Two forward paths:
+
+* ``snn_forward``        — dense/differentiable (training): conv via the
+  im2col oracle with an optional pruning mask applied to the weights; LIF
+  with surrogate gradients; supports LSQ fake-quantization of weights.
+* ``snn_forward_sparse`` — inference: pruned kernels converted to COO, conv
+  via the vectorized GOAP path (identical numerics, sparsity-aware
+  semantics).  Used by the serving engine and the streaming emulator.
+
+All LIF parameters (alpha, theta, v_th) are trainable: per-channel for conv
+layers, per-neuron for FC layers (paper §IV-B).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.goap import conv1d_dense_oracle, goap_conv_nnz
+from repro.core.lif import LIFParams, init_lif_params, lif_step
+from repro.core.saocds import max_pool_spikes, pad_same
+from repro.core.sparse_format import CooKernel, coo_from_dense
+
+__all__ = ["SNNConfig", "init_snn", "snn_forward", "snn_forward_sparse",
+           "sparsify_params", "param_count", "density_report"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNConfig:
+    """Paper model by default; reducible for smoke tests."""
+
+    conv_specs: Tuple[Tuple[int, int, int], ...] = ((11, 2, 16), (11, 16, 32), (5, 32, 64))
+    pool: int = 2
+    fc_specs: Tuple[Tuple[int, int], ...] = ((1024, 128), (128, 11))
+    input_width: int = 128
+    timesteps: int = 8           # = sigma-delta OSR
+    n_classes: int = 11
+    readout: str = "current_sum"  # or "spike_count"
+    lif_alpha: float = 0.9
+    lif_theta: float = 1.0
+    lif_v_th: float = 1.0
+
+    def feature_widths(self) -> List[int]:
+        """Spatial width after each conv+pool stage."""
+        w = self.input_width
+        widths = []
+        for _ in self.conv_specs:
+            w = w // self.pool
+            widths.append(w)
+        return widths
+
+    def validate(self) -> "SNNConfig":
+        w = self.input_width
+        ic = self.conv_specs[0][1]
+        for kw, c_in, c_out in self.conv_specs:
+            assert c_in == ic, f"conv chain broken: {c_in} != {ic}"
+            ic = c_out
+            w = w // self.pool
+        flat = ic * w
+        assert self.fc_specs[0][0] == flat, (
+            f"FC1 input {self.fc_specs[0][0]} != flattened conv output {flat}"
+        )
+        assert self.fc_specs[-1][1] == self.n_classes
+        return self
+
+
+def init_snn(key: jax.Array, cfg: SNNConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    """He-style init; params is a plain nested dict pytree."""
+    cfg.validate()
+    params: Dict[str, Any] = {"conv": [], "fc": []}
+    for kw, ic, oc in cfg.conv_specs:
+        key, k1 = jax.random.split(key)
+        fan_in = kw * ic
+        w = jax.random.normal(k1, (kw, ic, oc), dtype) * jnp.sqrt(2.0 / fan_in)
+        params["conv"].append({
+            "w": w,
+            "lif": init_lif_params((oc, 1), cfg.lif_alpha, cfg.lif_theta, cfg.lif_v_th, dtype),
+        })
+    for i, (din, dout) in enumerate(cfg.fc_specs):
+        key, k1 = jax.random.split(key)
+        w = jax.random.normal(k1, (din, dout), dtype) * jnp.sqrt(2.0 / din)
+        params["fc"].append({
+            "w": w,
+            "lif": init_lif_params((dout,), cfg.lif_alpha, cfg.lif_theta, cfg.lif_v_th, dtype),
+        })
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+def _masked(w: jax.Array, mask: Optional[jax.Array]) -> jax.Array:
+    return w if mask is None else w * mask
+
+
+def snn_forward(
+    params: Dict[str, Any],
+    frames: jax.Array,
+    cfg: SNNConfig,
+    masks: Optional[Dict[str, Any]] = None,
+    quant_fn=None,
+) -> jax.Array:
+    """Dense (training) forward for one sample.
+
+    frames: (T, IC0, W) binary. Returns logits (n_classes,).
+    masks: optional pruning masks matching params structure.
+    quant_fn: optional fake-quant fn applied to each weight (LSQ).
+    """
+    x = frames  # (T, C, W)
+
+    def maybe_quant(w):
+        return w if quant_fn is None else quant_fn(w)
+
+    for li, layer in enumerate(params["conv"]):
+        kw = layer["w"].shape[0]
+        w = maybe_quant(_masked(layer["w"], masks["conv"][li] if masks else None))
+        padded = pad_same(x, kw)  # (T, C, W + kw - 1)
+
+        def conv_step(v, ifm, w=w, lif=layer["lif"]):
+            cur = conv1d_dense_oracle(ifm, w)
+            return lif_step(v, cur, lif)
+
+        oc = w.shape[2]
+        oi = x.shape[-1]
+        v0 = jnp.zeros((oc, oi), dtype=w.dtype)
+        _, spikes = jax.lax.scan(conv_step, v0, padded)
+        x = max_pool_spikes(spikes, cfg.pool)  # (T, OC, W//pool)
+
+    x = x.reshape(x.shape[0], -1)  # (T, flat)
+
+    logits_acc = jnp.zeros((cfg.n_classes,), dtype=x.dtype)
+    for fi, layer in enumerate(params["fc"]):
+        w = maybe_quant(_masked(layer["w"], masks["fc"][fi] if masks else None))
+        is_last = fi == len(params["fc"]) - 1
+
+        def fc_step(v, s, w=w, lif=layer["lif"]):
+            cur = s.astype(w.dtype) @ w
+            v_next, out = lif_step(v, cur, lif)
+            return v_next, (out, cur)
+
+        v0 = jnp.zeros((w.shape[1],), dtype=w.dtype)
+        _, (spikes, currents) = jax.lax.scan(fc_step, v0, x)
+        if is_last:
+            if cfg.readout == "current_sum":
+                logits_acc = currents.sum(axis=0)
+            else:
+                logits_acc = spikes.sum(axis=0)
+        else:
+            x = spikes
+    return logits_acc
+
+
+def snn_forward_batch(params, frames_b, cfg, masks=None, quant_fn=None):
+    """(B, T, C, W) -> (B, n_classes)."""
+    return jax.vmap(lambda f: snn_forward(params, f, cfg, masks, quant_fn))(frames_b)
+
+
+# ---------------------------------------------------------------------------
+# Sparse (inference) path.
+# ---------------------------------------------------------------------------
+
+def sparsify_params(params: Dict[str, Any], masks: Optional[Dict[str, Any]] = None):
+    """Convert (optionally masked) dense params into the COO inference form."""
+    sp = {"conv": [], "fc": []}
+    for li, layer in enumerate(params["conv"]):
+        w = np.asarray(_masked(layer["w"], masks["conv"][li] if masks else None))
+        sp["conv"].append({"coo": coo_from_dense(w), "lif": layer["lif"]})
+    for fi, layer in enumerate(params["fc"]):
+        w = np.asarray(_masked(layer["w"], masks["fc"][fi] if masks else None))
+        sp["fc"].append({"w": jnp.asarray(w), "lif": layer["lif"]})
+    return sp
+
+
+def density_report(params, masks=None) -> Dict[str, float]:
+    out = {}
+    for li, layer in enumerate(params["conv"]):
+        w = np.asarray(_masked(layer["w"], masks["conv"][li] if masks else None))
+        out[f"conv{li + 1}"] = float((w != 0).mean())
+    for fi, layer in enumerate(params["fc"]):
+        w = np.asarray(_masked(layer["w"], masks["fc"][fi] if masks else None))
+        out[f"fc{fi + 1}"] = float((w != 0).mean())
+    return out
+
+
+def snn_forward_sparse(sparse_params, frames: jax.Array, cfg: SNNConfig) -> jax.Array:
+    """GOAP inference forward for one sample: (T, IC0, W) -> (n_classes,)."""
+    x = frames
+
+    for layer in sparse_params["conv"]:
+        coo: CooKernel = layer["coo"]
+        padded = pad_same(x, coo.kw)
+
+        def conv_step(v, ifm, coo=coo, lif=layer["lif"]):
+            cur = goap_conv_nnz(ifm, coo)
+            return lif_step(v, cur, lif)
+
+        v0 = jnp.zeros((coo.oc, x.shape[-1]), dtype=jnp.float32)
+        _, spikes = jax.lax.scan(conv_step, v0, padded)
+        x = max_pool_spikes(spikes, cfg.pool)
+
+    x = x.reshape(x.shape[0], -1)
+
+    logits = jnp.zeros((cfg.n_classes,), dtype=jnp.float32)
+    for fi, layer in enumerate(sparse_params["fc"]):
+        w = layer["w"]
+        is_last = fi == len(sparse_params["fc"]) - 1
+
+        def fc_step(v, s, w=w, lif=layer["lif"]):
+            cur = s.astype(w.dtype) @ w
+            v_next, out = lif_step(v, cur, lif)
+            return v_next, (out, cur)
+
+        v0 = jnp.zeros((w.shape[1],), dtype=w.dtype)
+        _, (spikes, currents) = jax.lax.scan(fc_step, v0, x)
+        if is_last:
+            logits = currents.sum(axis=0) if cfg.readout == "current_sum" else spikes.sum(axis=0)
+        else:
+            x = spikes
+    return logits

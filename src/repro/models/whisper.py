@@ -1,0 +1,278 @@
+"""Whisper-style encoder-decoder backbone (assigned arch: whisper-large-v3).
+
+The conv frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, d) — log-mel + the two strided
+convs happen off-model.  Faithful to Whisper elsewhere: LayerNorm (with
+bias), GELU MLPs (with bias), sinusoidal encoder positions, learned decoder
+positions, MHA, causal decoder self-attention + cross-attention into the
+encoder output.  Attention reuses the query-chunked implementation from
+``layers.py`` (required for the 32k shapes); deviations: a zero-init k-proj
+bias exists (Whisper omits it) and the out-proj bias is dropped — both are
+numerically absorbable and documented here.
+
+Decode uses a self-attention KV cache plus cross K/V projected once from
+the encoder output.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain_acts, constrain_head, constrain_logits
+
+from .config import ArchConfig
+from .layers import (
+    _dense_init,
+    attention,
+    init_attention,
+    mask_vocab_pad,
+    softmax_cross_entropy,
+)
+
+__all__ = [
+    "init_whisper",
+    "whisper_forward",
+    "whisper_loss",
+    "whisper_encode",
+    "whisper_prefill",
+    "init_whisper_decode_state",
+    "whisper_decode_step",
+    "precompute_cross_kv",
+]
+
+Params = Dict[str, Any]
+
+
+def _layer_norm(x, p, eps):
+    mu = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+    var = jnp.var(x.astype(jnp.float32), axis=-1, keepdims=True)
+    y = (x.astype(jnp.float32) - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"] + p["b"]).astype(x.dtype)
+
+
+def _ln_init(d, dtype):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _init_mlp(key, d, ff, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": _dense_init(k1, (d, ff), dtype=dtype),
+        "b1": jnp.zeros((ff,), dtype),
+        "w2": _dense_init(k2, (ff, d), dtype=dtype),
+        "b2": jnp.zeros((d,), dtype),
+    }
+
+
+def _mlp(p, x):
+    return jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def _sinusoid(s, d):
+    pos = jnp.arange(s)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / (10_000 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_whisper(key, cfg: ArchConfig, max_dec_pos: int = 65_536, dtype=jnp.float32) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    k_enc, k_dec, k_emb, k_pos = jax.random.split(key, 4)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": _ln_init(d, dtype), "attn": init_attention(k1, cfg, dtype=dtype),
+            "ln2": _ln_init(d, dtype), "mlp": _init_mlp(k2, d, ff, dtype),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": _ln_init(d, dtype), "self": init_attention(k1, cfg, dtype=dtype),
+            "ln2": _ln_init(d, dtype), "cross": init_attention(k2, cfg, dtype=dtype),
+            "ln3": _ln_init(d, dtype), "mlp": _init_mlp(k3, d, ff, dtype),
+        }
+
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    return {
+        "enc": jax.vmap(enc_layer)(jax.random.split(k_enc, n_enc)),
+        "dec": jax.vmap(dec_layer)(jax.random.split(k_dec, cfg.n_layers)),
+        "tok": _dense_init(k_emb, (cfg.padded_vocab, d), scale=0.02, dtype=dtype),
+        "dec_pos": _dense_init(k_pos, (max_dec_pos, d), scale=0.02, dtype=dtype),
+        "ln_enc": _ln_init(d, dtype),
+        "ln_dec": _ln_init(d, dtype),
+    }
+
+
+def whisper_encode(params: Params, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """frames: (B, S_enc, d) stub embeddings -> encoder output."""
+    x = frames + _sinusoid(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    x = constrain_acts(x)
+
+    def body(h, p):
+        hn = _layer_norm(h, p["ln1"], cfg.norm_eps)
+        a, _ = attention(p["attn"], hn, cfg, causal=False)
+        h = h + a
+        h = h + _mlp(p["mlp"], _layer_norm(h, p["ln2"], cfg.norm_eps))
+        return constrain_acts(h), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc"])
+    return _layer_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _decoder_hidden(params: Params, frames: jax.Array, tokens: jax.Array,
+                    cfg: ArchConfig) -> jax.Array:
+    enc = whisper_encode(params, frames, cfg)
+    b, s = tokens.shape
+    x = constrain_acts(params["tok"][tokens] + params["dec_pos"][:s])
+
+    def body(h, p):
+        hn = _layer_norm(h, p["ln1"], cfg.norm_eps)
+        a, _ = attention(p["self"], hn, cfg, causal=True)
+        h = h + a
+        c, _ = attention(
+            p["cross"], _layer_norm(h, p["ln2"], cfg.norm_eps), cfg,
+            kv_x=enc, causal=False,
+        )
+        h = h + c
+        h = h + _mlp(p["mlp"], _layer_norm(h, p["ln3"], cfg.norm_eps))
+        return constrain_acts(h), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec"])
+    return constrain_head(_layer_norm(x, params["ln_dec"], cfg.norm_eps))
+
+
+def whisper_forward(
+    params: Params, frames: jax.Array, tokens: jax.Array, cfg: ArchConfig
+) -> jax.Array:
+    """Teacher-forced training forward -> decoder logits (B, S_dec, V)."""
+    x = _decoder_hidden(params, frames, tokens, cfg)
+    # tied unembedding (Whisper ties)
+    return constrain_logits(mask_vocab_pad(x @ params["tok"].T, cfg))
+
+
+def whisper_loss(params, frames, tokens, labels, cfg,
+                 ce_chunk: int = 256) -> jax.Array:
+    """Chunked CE over decoder positions (see lm.lm_loss)."""
+    x = _decoder_hidden(params, frames, tokens, cfg)
+    b, s, d = x.shape
+    chunk = ce_chunk if (ce_chunk and s % ce_chunk == 0) else s
+    nc = s // chunk
+
+    def body(acc, inp):
+        xc, lc = inp
+        logits = mask_vocab_pad(xc @ params["tok"].T, cfg)
+        return acc + softmax_cross_entropy(logits, lc).sum(), None
+
+    xcs = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    lcs = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32),
+                            (xcs, lcs))
+    return total / (b * s)
+
+
+def whisper_prefill(params: Params, frames: jax.Array, tokens: jax.Array,
+                    cfg: ArchConfig):
+    """Encode + teacher-forced decoder pass that materializes decode state.
+
+    Returns ``(last_logits (B, 1, V), state)`` with ``state`` shaped like
+    :func:`init_whisper_decode_state` (self-KV holds the prompt, cross-KV
+    is projected once from the encoder output).
+    """
+    enc = whisper_encode(params, frames, cfg)
+    b, s = tokens.shape
+    x = constrain_acts(params["tok"][tokens] + params["dec_pos"][:s])
+
+    def body(h, p):
+        hn = _layer_norm(h, p["ln1"], cfg.norm_eps)
+        a, cache = attention(p["self"], hn, cfg, causal=True, build_cache=True)
+        h = h + a
+        c, _ = attention(
+            p["cross"], _layer_norm(h, p["ln2"], cfg.norm_eps), cfg,
+            kv_x=enc, causal=False,
+        )
+        h = h + c
+        h = h + _mlp(p["mlp"], _layer_norm(h, p["ln3"], cfg.norm_eps))
+        return constrain_acts(h), (cache["k"], cache["v"])
+
+    x, (sk, sv) = jax.lax.scan(jax.checkpoint(body), x, params["dec"])
+    ck, cv = precompute_cross_kv(params, enc, cfg)
+    x = constrain_head(_layer_norm(x[:, -1:], params["ln_dec"], cfg.norm_eps))
+    logits = mask_vocab_pad(x @ params["tok"].T, cfg)
+    state = {
+        "self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv,
+        "len": jnp.asarray(s, jnp.int32),
+    }
+    return logits, state
+
+
+def precompute_cross_kv(params: Params, enc: jax.Array, cfg: ArchConfig):
+    """Project the encoder output once: (L, B, S_enc, H, hd) k/v caches."""
+    b, s_enc, d = enc.shape
+    nh, hd = cfg.n_heads, cfg.hd
+
+    def proj(p):
+        k = (enc @ p["cross"]["wk"] + p["cross"]["bk"]).reshape(b, s_enc, nh, hd)
+        v = (enc @ p["cross"]["wv"] + p["cross"]["bv"]).reshape(b, s_enc, nh, hd)
+        return k, v
+
+    return jax.vmap(proj)(params["dec"])
+
+
+def init_whisper_decode_state(cfg: ArchConfig, batch: int, ctx: int, s_enc: int, dtype=jnp.bfloat16):
+    nh, hd = cfg.n_heads, cfg.hd
+    n_dec = cfg.n_layers
+    return {
+        "self_k": jnp.zeros((n_dec, batch, ctx, nh, hd), dtype),
+        "self_v": jnp.zeros((n_dec, batch, ctx, nh, hd), dtype),
+        "cross_k": jnp.zeros((n_dec, batch, s_enc, nh, hd), dtype),
+        "cross_v": jnp.zeros((n_dec, batch, s_enc, nh, hd), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _cross_decode(p, x, ck, cv, cfg):
+    """q-len-1 cross attention against precomputed (B, S_enc, H, hd) k/v."""
+    b, s, d = x.shape
+    nh, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"] + p["bq"]).reshape(b, s, nh, hd)
+    scores = jnp.einsum("bsnh,bcnh->bnsc", q, ck.astype(q.dtype)) / math.sqrt(hd)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(q.dtype)
+    out = jnp.einsum("bnsc,bcnh->bsnh", probs, cv.astype(q.dtype)).reshape(b, s, d)
+    return out @ p["wo"]
+
+
+def whisper_decode_step(params: Params, state, token: jax.Array, cfg: ArchConfig):
+    """One decoder step with self-KV cache + precomputed cross K/V."""
+    b, s = token.shape
+    pos = state["len"]
+    x = constrain_acts(params["tok"][token] + jax.lax.dynamic_slice(
+        params["dec_pos"], (pos, 0), (s, cfg.d_model)
+    ))
+
+    def body(h, xs):
+        p, sk, sv, ck, cv = xs
+        cache = {"k": sk, "v": sv, "len": pos}
+        hn = _layer_norm(h, p["ln1"], cfg.norm_eps)
+        a, new_cache = attention(p["self"], hn, cfg, cache=cache,
+                                 positions=pos + jnp.arange(s)[None, :])
+        h = h + a
+        h = h + _cross_decode(
+            p["cross"], _layer_norm(h, p["ln2"], cfg.norm_eps), ck, cv, cfg
+        )
+        h = h + _mlp(p["mlp"], _layer_norm(h, p["ln3"], cfg.norm_eps))
+        return h, (new_cache["k"], new_cache["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x,
+        (params["dec"], state["self_k"], state["self_v"],
+         state["cross_k"], state["cross_v"]),
+    )
+    x = constrain_head(_layer_norm(x, params["ln_dec"], cfg.norm_eps))
+    logits = constrain_logits(mask_vocab_pad(x @ params["tok"].T, cfg))
+    new_state = {**state, "self_k": nk, "self_v": nv, "len": pos + s}
+    return logits, new_state

@@ -1,0 +1,3 @@
+"""Serving: batched streaming AMC inference engine."""
+
+from .engine import AMCServeEngine, ServeStats

@@ -1,0 +1,13 @@
+"""Training substrate: optimizers, pruning, LSQ quantization, checkpointing,
+and the surrogate-gradient BPTT trainer."""
+
+from .optimizer import adamw, sgd, clip_by_global_norm, apply_updates
+from .pruning import (
+    target_density_at,
+    magnitude_masks,
+    make_mask_pytree,
+    mask_density,
+)
+from .lsq import lsq_fake_quant, init_lsq_scales, quantize_to_int, dequantize
+from .checkpoint import CheckpointManager
+from .trainer import SNNTrainer, TrainerConfig

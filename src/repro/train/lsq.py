@@ -1,0 +1,66 @@
+"""Learned Step Size Quantization (LSQ) for 16-bit fixed-point weights.
+
+Paper §IV-C.2: weights are quantized to 16-bit fixed point for the FPGA;
+LSQ treats the quantization step size as a trainable parameter optimized by
+backprop through straight-through estimators.  Forward/backward simulate
+the quantization; full-precision master weights receive the gradients.
+
+Implementation follows Esser et al. (LSQ, ICLR 2020): the step-size
+gradient is scaled by 1/sqrt(N * Q_max) for stable joint training.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lsq_fake_quant", "init_lsq_scales", "quantize_to_int", "dequantize"]
+
+
+def _round_ste(x: jax.Array) -> jax.Array:
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def lsq_fake_quant(w: jax.Array, step: jax.Array, bits: int = 16) -> jax.Array:
+    """Fake-quantize w with trainable step size (per-tensor).
+
+    Gradients: straight-through to w inside the clip range; LSQ gradient to
+    ``step`` (including the grad-scale trick).
+    """
+    qmax = 2 ** (bits - 1) - 1
+    qmin = -(2 ** (bits - 1))
+    grad_scale = 1.0 / jnp.sqrt(jnp.asarray(w.size, jnp.float32) * qmax)
+    # grad-scale trick: value of `step`, gradient scaled by grad_scale
+    s = step * grad_scale + jax.lax.stop_gradient(step * (1.0 - grad_scale))
+    s = jnp.maximum(s, 1e-12)
+    w_div = w / s
+    w_clip = jnp.clip(w_div, qmin, qmax)
+    w_q = _round_ste(w_clip)
+    return w_q * s
+
+
+def init_lsq_scales(params: Dict, bits: int = 16) -> Dict:
+    """Per-layer initial step size: 2*mean|w| / sqrt(Q_max) (LSQ init)."""
+    qmax = 2 ** (bits - 1) - 1
+
+    def init_one(w):
+        return 2.0 * jnp.mean(jnp.abs(w)) / jnp.sqrt(jnp.asarray(qmax, jnp.float32))
+
+    return {
+        "conv": [init_one(l["w"]) for l in params["conv"]],
+        "fc": [init_one(l["w"]) for l in params["fc"]],
+    }
+
+
+def quantize_to_int(w: jax.Array, step: jax.Array, bits: int = 16) -> jax.Array:
+    """Final conversion to integer codes (deployment form)."""
+    qmax = 2 ** (bits - 1) - 1
+    qmin = -(2 ** (bits - 1))
+    codes = jnp.clip(jnp.round(w / step), qmin, qmax)
+    dtype = jnp.int16 if bits <= 16 else jnp.int32
+    return codes.astype(dtype)
+
+
+def dequantize(codes: jax.Array, step: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * step

@@ -1,0 +1,125 @@
+"""Hand-rolled pytree optimizers (AdamW, SGD+momentum) + gradient clipping.
+
+No optax dependency: the container ships bare jax.  API mirrors the
+(init_fn, update_fn) convention so the trainer and the LM train-steps share
+optimizers.  All state is a pytree of the same structure as params, so the
+distributed train steps can shard optimizer state like parameters
+(ZeRO-style sharding falls out of pjit param shardings).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "sgd", "clip_by_global_norm", "apply_updates", "global_norm"]
+
+Params = Any
+Updates = Any
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw(
+    lr: float | Callable[[jax.Array], jax.Array],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Tuple[Callable, Callable]:
+    """Returns (init_fn, update_fn); update_fn(grads, state, params) ->
+    (updates, state)."""
+
+    def lr_at(step):
+        return lr(step) if callable(lr) else lr
+
+    def init_fn(params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update_fn(grads, state: AdamWState, params) -> Tuple[Updates, AdamWState]:
+        step = state.step + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_at(step)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    return init_fn, update_fn
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Any
+
+
+def sgd(
+    lr: float | Callable[[jax.Array], jax.Array],
+    momentum: float = 0.9,
+    nesterov: bool = False,
+) -> Tuple[Callable, Callable]:
+    def lr_at(step):
+        return lr(step) if callable(lr) else lr
+
+    def init_fn(params) -> SGDState:
+        return SGDState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+            ),
+        )
+
+    def update_fn(grads, state: SGDState, params=None) -> Tuple[Updates, SGDState]:
+        step = state.step + 1
+        buf = jax.tree_util.tree_map(
+            lambda b, g: momentum * b + g.astype(jnp.float32), state.momentum, grads
+        )
+        lr_t = lr_at(step)
+        if nesterov:
+            updates = jax.tree_util.tree_map(
+                lambda g, b: -lr_t * (g.astype(jnp.float32) + momentum * b), grads, buf
+            )
+        else:
+            updates = jax.tree_util.tree_map(lambda b: -lr_t * b, buf)
+        return updates, SGDState(step=step, momentum=buf)
+
+    return init_fn, update_fn

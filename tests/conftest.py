@@ -1,0 +1,16 @@
+import numpy as np
+import pytest
+from hypothesis import settings
+
+# Keep hypothesis fast and deterministic on CI-class CPU containers.
+settings.register_profile("ci", max_examples=25, deadline=None, derandomize=True)
+settings.load_profile("ci")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

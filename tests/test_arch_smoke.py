@@ -1,0 +1,191 @@
+"""Per-architecture smoke tests: reduced configs, fwd + train + decode.
+
+Each assigned arch instantiates a family-faithful miniature
+(``reduced_config``), runs one forward + one grad step on CPU, and checks
+output shapes + finiteness.  Decode smoke: prefill -> one decode step
+consistency against the full forward (the serving path must agree with
+the training path on the same tokens).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_IDS, get_config, reduced_config
+from repro.models.lm import (
+    init_decode_state,
+    init_lm,
+    lm_decode_step,
+    lm_forward,
+    lm_loss,
+    lm_prefill,
+)
+from repro.models.whisper import (
+    init_whisper,
+    init_whisper_decode_state,
+    whisper_decode_step,
+    whisper_forward,
+    whisper_loss,
+    whisper_prefill,
+)
+
+B, S = 2, 16
+
+
+def _inputs(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    extra = None
+    if cfg.family == "vlm":
+        extra = jnp.asarray(
+            rng.normal(size=(B, cfg.n_patches, cfg.d_model)).astype(np.float32))
+    if cfg.family == "encdec":
+        extra = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)).astype(np.float32))
+    return toks, extra
+
+
+def _params(cfg):
+    key = jax.random.PRNGKey(0)
+    if cfg.family == "encdec":
+        return init_whisper(key, cfg, max_dec_pos=4 * S)
+    return init_lm(key, cfg)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_finite(arch):
+    cfg = reduced_config(arch)
+    params = _params(cfg)
+    toks, extra = _inputs(cfg)
+    if cfg.family == "encdec":
+        logits = whisper_forward(params, extra, toks, cfg)
+    else:
+        logits = lm_forward(params, toks, cfg, patch_embeds=extra)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits[..., : cfg.vocab]).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_finite(arch):
+    cfg = reduced_config(arch)
+    params = _params(cfg)
+    toks, extra = _inputs(cfg)
+    if cfg.family == "encdec":
+        loss_fn = lambda p: whisper_loss(p, extra, toks, toks, cfg)
+    else:
+        loss_fn = lambda p: lm_loss(p, toks, toks, cfg, patch_embeds=extra)
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss))
+    # loss ~ log(vocab) at init (padded tail must not leak into the CE)
+    assert float(loss) < np.log(cfg.vocab) + 2.0
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_loss_decreases(arch):
+    cfg = reduced_config(arch)
+    from repro.launch.train import LMTrainer
+
+    tr = LMTrainer(cfg, lr=5e-3, batch=2, seq=16)
+    hist = tr.run(steps=8, log_every=8)
+    first, last = hist["loss"][0], hist["loss"][-1]
+    assert np.isfinite(last)
+    # Zipf stream is learnable; 8 steps must move the loss down
+    assert last < first + 1e-3, (first, last)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """serve path: prefill(t[:-1]) + decode(t[-1]) == forward(t) last logits.
+
+    MoE: capacity dropping is train-path-only (a batched forward can drop
+    the last token when an expert overflows; single-token decode never
+    drops), so the check runs drop-free with a large capacity factor.
+    """
+    import dataclasses
+
+    cfg = reduced_config(arch)
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = _params(cfg)
+    toks, extra = _inputs(cfg)
+
+    if cfg.family == "encdec":
+        full = whisper_forward(params, extra, toks, cfg)
+        _, state = whisper_prefill(params, extra, toks[:, : S - 1], cfg)
+        # headroom: whisper self-cache is exactly prefill-sized; rebuild
+        # decode state with room for one more token
+        big = init_whisper_decode_state(cfg, B, S, S, dtype=state["self_k"].dtype)
+        big["self_k"] = big["self_k"].at[:, :, : S - 1].set(state["self_k"])
+        big["self_v"] = big["self_v"].at[:, :, : S - 1].set(state["self_v"])
+        big["cross_k"], big["cross_v"] = state["cross_k"], state["cross_v"]
+        big["len"] = state["len"]
+        step_logits, _ = whisper_decode_step(params, big, toks[:, -1:], cfg)
+    else:
+        full = lm_forward(params, toks, cfg, patch_embeds=extra)
+        _, states = lm_prefill(params, toks[:, : S - 1], cfg,
+                               patch_embeds=extra, cache_headroom=1)
+        step_logits, _ = lm_decode_step(params, states, toks[:, -1:], cfg)
+
+    ref = full[:, -1, : cfg.vocab]
+    got = step_logits[:, -1, : cfg.vocab]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "qwen3-14b"])
+def test_int8_kv_cache_decode_close_to_bf16(arch):
+    """int8 KV cache (serving optimization): decode logits stay within
+    quantization tolerance of the exact cache."""
+    cfg = reduced_config(arch)
+    params = _params(cfg)
+    toks, _ = _inputs(cfg)
+    ctx = S + 4
+    state_bf = init_decode_state(cfg, B, ctx, dtype=jnp.float32)
+    state_q = init_decode_state(cfg, B, ctx, kv_int8=True)
+    logits_bf, logits_q = None, None
+    for t in range(4):
+        tok = toks[:, t: t + 1]
+        logits_bf, state_bf = lm_decode_step(params, state_bf, tok, cfg)
+        logits_q, state_q = lm_decode_step(params, state_q, tok, cfg)
+    ref = np.asarray(logits_bf[..., : cfg.vocab])
+    got = np.asarray(logits_q[..., : cfg.vocab])
+    np.testing.assert_allclose(got, ref, rtol=0.1, atol=0.1)
+    # and the quantized path is not trivially identical (it quantized)
+    assert state_q[0]["k"].dtype == jnp.int8
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The full configs carry the exact assigned hyper-parameters."""
+    cfg = get_config(arch)
+    assigned = {
+        "qwen2-moe-a2.7b": dict(n_layers=24, d_model=2048, n_heads=16,
+                                d_ff=1408, vocab=151936, n_experts=60, top_k=4),
+        "llama4-scout-17b-a16e": dict(n_layers=48, d_model=5120, n_heads=40,
+                                      n_kv=8, d_ff=8192, vocab=202048,
+                                      n_experts=16, top_k=1),
+        "qwen1.5-0.5b": dict(n_layers=24, d_model=1024, n_heads=16, n_kv=16,
+                             d_ff=2816, vocab=151936, qkv_bias=True),
+        "yi-9b": dict(n_layers=48, d_model=4096, n_heads=32, n_kv=4,
+                      d_ff=11008, vocab=64000),
+        "qwen3-14b": dict(n_layers=40, d_model=5120, n_heads=40, n_kv=8,
+                          d_ff=17408, vocab=151936, qk_norm=True),
+        "llama3-8b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv=8,
+                          d_ff=14336, vocab=128256),
+        "mamba2-780m": dict(n_layers=48, d_model=1536, vocab=50280,
+                            ssm_state=128),
+        "internvl2-1b": dict(n_layers=24, d_model=896, n_heads=14, n_kv=2,
+                             d_ff=4864, vocab=151655),
+        "recurrentgemma-9b": dict(n_layers=38, d_model=4096, n_heads=16,
+                                  n_kv=1, d_ff=12288, vocab=256000),
+        "whisper-large-v3": dict(n_layers=32, d_model=1280, n_heads=20,
+                                 n_kv=20, d_ff=5120, vocab=51866),
+    }[arch]
+    for k, v in assigned.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    assert cfg.padded_vocab % 128 == 0 and cfg.padded_vocab >= cfg.vocab

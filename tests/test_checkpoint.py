@@ -1,0 +1,119 @@
+"""Fault-tolerance: atomic checkpoints, keep-N GC, resume, elastic restore."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.train.checkpoint import CheckpointManager
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32)),
+        "nested": {"b": jnp.asarray(rng.normal(size=(4,)).astype(np.float32))},
+        "step": jnp.asarray(3, jnp.int32),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    tree = _tree()
+    mgr.save(10, tree, extra={"note": "x"})
+    restored, manifest = mgr.restore(tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert manifest["step"] == 10 and manifest["extra"]["note"] == "x"
+
+
+def test_async_save_and_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(1, _tree())
+    mgr.wait()
+    assert mgr.all_steps() == [1]
+
+
+def test_keep_n_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in [1, 2, 3, 4]:
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_restore_latest_by_default(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    t1, t2 = _tree(1), _tree(2)
+    mgr.save(1, t1)
+    mgr.save(5, t2)
+    restored, manifest = mgr.restore(t1)
+    assert manifest["step"] == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(t2["w"]))
+
+
+def test_half_written_checkpoint_invisible(tmp_path):
+    """A crash mid-save (tmp dir left behind) must not corrupt discovery."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _tree())
+    # simulate a crashed save: orphan tmp dir + a step dir missing manifest
+    os.makedirs(tmp_path / ".tmp.step_9")
+    os.makedirs(tmp_path / "step_7")
+    assert mgr.all_steps() == [1]
+    restored, manifest = mgr.restore(_tree())
+    assert manifest["step"] == 1
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _tree())
+    bad_shape = _tree()
+    bad_shape["w"] = jnp.zeros((3, 3))
+    with pytest.raises(ValueError):
+        mgr.restore(bad_shape)
+    bad_struct = {"only": jnp.zeros(2)}
+    with pytest.raises(ValueError):
+        mgr.restore(bad_struct)
+
+
+def test_elastic_restore_onto_new_sharding(tmp_path):
+    """Save under one device layout, restore and re-place under another:
+    checkpoints are layout-free (unsharded arrays), so elastic rescaling is
+    a restore + device_put with the new sharding."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    tree = _tree()
+    mgr.save(1, tree)
+    restored, _ = mgr.restore(tree)
+    # single-device container: re-placement onto a (possibly different)
+    # sharding is a plain device_put; on a real mesh the same call takes a
+    # NamedSharding for the new mesh.
+    dev = jax.devices()[0]
+    replaced = jax.tree_util.tree_map(lambda a: jax.device_put(a, dev), restored)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(replaced)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trainer_resume_bitwise_identical(tmp_path):
+    """Train k steps + save; new trainer resumes and matches exactly."""
+    from repro.models.snn import SNNConfig
+    from repro.train import SNNTrainer, TrainerConfig
+
+    cfg = TrainerConfig(
+        total_steps=6, batch_size=4, ckpt_dir=str(tmp_path), ckpt_every=3, osr=2,
+    )
+    small = SNNConfig(
+        conv_specs=((3, 2, 4), (3, 4, 8), (3, 8, 8)),
+        fc_specs=((8 * 16, 16), (16, 11)),
+        timesteps=2,
+    )
+    tr = SNNTrainer(small, cfg)
+    tr.run(steps=6, log_every=3)
+    tr.ckpt.wait()
+
+    tr2 = SNNTrainer(small, cfg)
+    assert tr2.resume()
+    assert tr2.step == 6
+    for a, b in zip(
+        jax.tree_util.tree_leaves(tr.params), jax.tree_util.tree_leaves(tr2.params)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,113 @@
+"""GOAP correctness + the paper's Table I exact counts."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from repro.core.cost_model import (
+    bits_fetched,
+    fc_traditional_counts,
+    fc_wm_counts,
+    goap_conv_counts,
+    sw_conv_counts,
+)
+from repro.core.goap import (
+    build_shift_buffer,
+    conv1d_dense_oracle,
+    goap_conv_nnz,
+    goap_conv_reference,
+)
+from repro.core.sparse_format import coo_from_dense, weight_mask_from_dense
+
+
+def _case(seed, kw, ic, oc, wi, w_density, s_density):
+    rng = np.random.default_rng(seed)
+    k = ((rng.random((kw, ic, oc)) < w_density) * rng.normal(size=(kw, ic, oc))).astype(
+        np.float32
+    )
+    ifm = (rng.random((ic, wi)) < s_density).astype(np.float32)
+    return k, ifm
+
+
+conv_cases = st.tuples(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 5),            # kw
+    st.integers(1, 6),            # ic
+    st.integers(1, 8),            # oc
+    st.integers(6, 24),           # wi
+    st.sampled_from([0.0, 0.1, 0.5, 1.0]),
+    st.sampled_from([0.0, 0.3, 0.7, 1.0]),
+)
+
+
+@given(conv_cases)
+def test_goap_equals_dense_oracle(case):
+    seed, kw, ic, oc, wi, wd, sd = case
+    if wi < kw:
+        wi = kw
+    k, ifm = _case(seed, kw, ic, oc, wi, wd, sd)
+    coo = coo_from_dense(k)
+    dense = np.asarray(conv1d_dense_oracle(jnp.asarray(ifm), jnp.asarray(k)))
+    goap = np.asarray(goap_conv_nnz(jnp.asarray(ifm), coo))
+    ref = goap_conv_reference(ifm, coo)
+    np.testing.assert_allclose(goap, dense, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ref, dense, rtol=1e-5, atol=1e-5)
+
+
+def test_shift_buffer_layout():
+    """X'[ic*KW + ci, oi] == I[ic, oi + ci]."""
+    ifm = np.arange(12, dtype=np.float32).reshape(2, 6)
+    kw = 3
+    x = np.asarray(build_shift_buffer(jnp.asarray(ifm), kw))
+    oi = 6 - kw + 1
+    for ic in range(2):
+        for ci in range(kw):
+            np.testing.assert_array_equal(x[ic * kw + ci], ifm[ic, ci : ci + oi])
+
+
+def test_table1_exact_counts():
+    """Paper Table I on the Fig. 3 example: SW (24, 96, 48) vs GOAP
+    (48, 12, 24); fetched bits 1560 vs 240 (§III-C.2)."""
+    kw, ic, oc, wi = 3, 2, 4, 6
+    k = np.zeros((kw, ic, oc), dtype=np.float32)
+    for o in range(oc):  # identical distributions, 50% spatial sparsity
+        k[1, 0, o], k[0, 1, o], k[2, 1, o] = 1.0, 2.0, 3.0
+    ifm = np.zeros((ic, wi), dtype=np.float32)
+    ifm[0, [1, 3, 5]] = 1  # 50% temporal sparsity
+    ifm[1, [0, 2, 4]] = 1
+
+    sw = sw_conv_counts(ifm, (kw, ic, oc))
+    assert (sw.input_fetches, sw.weight_fetches, sw.accumulations) == (24, 96, 48)
+    assert bits_fetched(sw) == 1560
+
+    gp = goap_conv_counts(ifm, coo_from_dense(k))
+    assert (gp.input_fetches, gp.weight_fetches, gp.accumulations) == (48, 12, 24)
+    assert bits_fetched(gp) == 240
+
+
+@given(conv_cases)
+def test_goap_accumulations_never_exceed_sw(case):
+    """GOAP exploits spatial sparsity on top of temporal: accum_goap <=
+    accum_sw always, with equality iff the kernel is fully dense."""
+    seed, kw, ic, oc, wi, wd, sd = case
+    if wi < kw:
+        wi = kw
+    k, ifm = _case(seed, kw, ic, oc, wi, wd, sd)
+    coo = coo_from_dense(k)
+    sw = sw_conv_counts(ifm, (kw, ic, oc))
+    gp = goap_conv_counts(ifm, coo)
+    assert gp.accumulations <= sw.accumulations
+    if coo.density == 1.0:
+        assert gp.accumulations == sw.accumulations
+    assert gp.weight_fetches <= sw.weight_fetches
+
+
+def test_fc_weight_mask_counts():
+    """Fig. 2 example: 4 inputs (3 active), one nnz weight in the active
+    rows -> traditional fetches 3 weights, WM fetches 1."""
+    w = np.array([[0.0], [1.0], [0.0], [0.0]], dtype=np.float32)
+    spikes = np.array([1, 1, 0, 1], dtype=np.float32)
+    trad = fc_traditional_counts(spikes, w)
+    wm = fc_wm_counts(spikes, weight_mask_from_dense(w))
+    assert trad.weight_fetches == 3
+    assert wm.weight_fetches == 1
+    assert wm.accumulations <= trad.accumulations

@@ -1,0 +1,90 @@
+"""Validate the trip-count-aware HLO analyzer against XLA's own numbers.
+
+The roofline numbers stand on this parser, so it gets its own ground-truth
+check: on a program WITHOUT loops, our dot-FLOPs must match XLA's
+``cost_analysis`` flops; on a scanned program, ours must be ~trip-count
+times larger (XLA counts while bodies once).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def _compiled_text(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    ca = c.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    return c.as_text(), float(ca.get("flops", 0.0))
+
+
+def test_matches_xla_on_straightline_matmuls():
+    d = 128
+    a = jax.ShapeDtypeStruct((8, d), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((d, d), jnp.float32)
+    w2 = jax.ShapeDtypeStruct((d, d), jnp.float32)
+
+    def fn(a, w1, w2):
+        return jnp.tanh(a @ w1) @ w2
+
+    text, xla_flops = _compiled_text(fn, a, w1, w2)
+    ours = analyze_hlo(text)
+    expected = 2 * 8 * d * d * 2  # two matmuls
+    assert ours.dot_flops == pytest.approx(expected, rel=0.01)
+    # XLA counts elementwise flops too; dots dominate
+    assert ours.dot_flops <= xla_flops <= ours.dot_flops * 1.2
+
+
+def test_trip_count_multiplies_scan_body():
+    d, L = 64, 12
+    ws = jax.ShapeDtypeStruct((L, d, d), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, d), jnp.float32)
+
+    def scanned(ws, x):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, ws)
+        return h
+
+    text, xla_flops = _compiled_text(scanned, ws, x)
+    ours = analyze_hlo(text)
+    per_layer = 2 * 4 * d * d
+    assert ours.dot_flops == pytest.approx(L * per_layer, rel=0.05)
+    # XLA visits the body once: ~1/L of the true count
+    assert xla_flops < ours.dot_flops / (L / 2)
+    assert not ours.warnings
+
+
+def test_nested_scans_compose_trip_counts():
+    d, outer, inner = 32, 5, 7
+    ws = jax.ShapeDtypeStruct((outer, inner, d, d), jnp.float32)
+    x = jax.ShapeDtypeStruct((2, d), jnp.float32)
+
+    def fn(ws, x):
+        def outer_body(h, w_in):
+            def inner_body(g, w):
+                return jnp.tanh(g @ w), None
+            g, _ = jax.lax.scan(inner_body, h, w_in)
+            return g, None
+        h, _ = jax.lax.scan(outer_body, x, ws)
+        return h
+
+    text, _ = _compiled_text(fn, ws, x)
+    ours = analyze_hlo(text)
+    expected = outer * inner * 2 * 2 * d * d
+    assert ours.dot_flops == pytest.approx(expected, rel=0.05)
+
+
+def test_bytes_and_contrib_are_positive_and_consistent():
+    d = 256
+    a = jax.ShapeDtypeStruct((16, d), jnp.float32)
+    w = jax.ShapeDtypeStruct((d, d), jnp.float32)
+    text, _ = _compiled_text(lambda a, w: jax.nn.relu(a @ w), a, w)
+    ours = analyze_hlo(text)
+    assert ours.bytes_accessed > (16 * d + d * d) * 4  # at least one read
+    assert sum(ours.byte_contrib.values()) <= ours.bytes_accessed + 1

@@ -1,0 +1,145 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.goap import conv1d_dense_oracle
+from repro.core.lif import init_lif_params
+from repro.core.sparse_format import block_sparse_from_dense
+from repro.kernels.goap_conv import goap_conv_block_sparse
+from repro.kernels.lif_update import lif_update_fused
+from repro.kernels.ops import goap_conv_op, lif_op, wm_fc_op
+from repro.kernels.ref import (
+    goap_conv_block_sparse_ref,
+    lif_update_fused_ref,
+    wm_fc_matmul_ref,
+)
+from repro.kernels.wm_fc import wm_fc_matmul
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# goap_conv
+# ---------------------------------------------------------------------------
+
+GOAP_SWEEP = [
+    # (kw, ic, oc, wi, density, block_oc, block_k, block_oi)
+    (11, 2, 16, 138, 1.0, 8, 32, 32),
+    (11, 16, 32, 74, 0.3, 8, 64, 64),
+    (5, 32, 64, 36, 0.10, 8, 32, 32),
+    (5, 32, 64, 36, 0.02, 4, 16, 16),
+    (3, 1, 1, 10, 1.0, 8, 128, 128),
+    (7, 24, 48, 150, 0.5, 16, 128, 128),
+]
+
+
+@pytest.mark.parametrize("kw,ic,oc,wi,density,bo,bk,boi", GOAP_SWEEP)
+def test_goap_kernel_vs_dense(kw, ic, oc, wi, density, bo, bk, boi):
+    k = ((RNG.random((kw, ic, oc)) < density) * RNG.normal(size=(kw, ic, oc))).astype(
+        np.float32
+    )
+    bs = block_sparse_from_dense(k, block_oc=bo, block_k=bk)
+    ifm = (RNG.random((ic, wi)) < 0.5).astype(np.float32)
+    out = goap_conv_op(jnp.asarray(ifm), bs, block_oi=boi)
+    ref = conv1d_dense_oracle(jnp.asarray(ifm), jnp.asarray(k))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_goap_kernel_raw_vs_ref(dtype):
+    """Raw kernel contract (padded blocked layout) against the ref oracle."""
+    r, mt, bo, bk, nk, oi = 3, 4, 8, 16, 5, 64
+    blocks = jnp.asarray(RNG.normal(size=(r, mt, bo, bk)), dtype)
+    cols = jnp.asarray(RNG.integers(0, nk, (r, mt)), jnp.int32)
+    x = jnp.asarray((RNG.random((nk * bk, oi)) < 0.5), dtype)
+    out = goap_conv_block_sparse(blocks, cols, x, block_oc=bo, block_k=bk, block_oi=oi)
+    ref = goap_conv_block_sparse_ref(blocks, cols, x)
+    # bf16 accumulation differs between the kernel (per-tile +=) and the ref
+    # (single einsum); both are within bf16 noise of the f32 truth, so the
+    # cross-check needs an absolute floor scaled to the accumulation depth.
+    rtol, atol = (1e-5, 1e-5) if dtype == jnp.float32 else (5e-2, 0.3)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=rtol, atol=atol
+    )
+
+
+def test_goap_kernel_padding_tiles_are_noop():
+    """Padded (invalid) tiles must contribute exactly zero."""
+    k = np.zeros((3, 4, 8), dtype=np.float32)
+    k[0, 0, 0] = 2.0  # single nnz -> every other tile is padding
+    bs = block_sparse_from_dense(k, block_oc=4, block_k=8)
+    ifm = np.ones((4, 18), dtype=np.float32)
+    out = goap_conv_op(jnp.asarray(ifm), bs, block_oi=16)
+    ref = conv1d_dense_oracle(jnp.asarray(ifm), jnp.asarray(k))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# wm_fc
+# ---------------------------------------------------------------------------
+
+FC_SWEEP = [
+    (1, 1024, 128, jnp.float32),
+    (8, 1024, 128, jnp.float32),
+    (5, 100, 37, jnp.float32),      # unaligned everything
+    (16, 128, 11, jnp.float32),
+    (8, 256, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,din,dout,dtype", FC_SWEEP)
+def test_wm_fc_kernel(b, din, dout, dtype):
+    s = jnp.asarray((RNG.random((b, din)) < 0.5), dtype)
+    w = jnp.asarray(
+        (RNG.random((din, dout)) < 0.4) * RNG.normal(size=(din, dout)), dtype
+    )
+    out = wm_fc_matmul(s, w)
+    ref = wm_fc_matmul_ref(s, w)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_wm_fc_op_vector_input():
+    s = jnp.asarray((RNG.random(64) < 0.5).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(64, 7)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(wm_fc_op(s, w)), np.asarray(s @ w), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# lif_update
+# ---------------------------------------------------------------------------
+
+LIF_SWEEP = [
+    (1, 16), (4, 128), (8, 200), (3, 1030), (16, 7),
+]
+
+
+@pytest.mark.parametrize("t,n", LIF_SWEEP)
+def test_lif_kernel_vs_ref(t, n):
+    cur = jnp.asarray(RNG.normal(size=(t, n)).astype(np.float32))
+    v0 = jnp.asarray(RNG.normal(size=(n,)).astype(np.float32))
+    alpha = jnp.asarray(RNG.uniform(0.5, 0.99, n).astype(np.float32))
+    theta = jnp.asarray(RNG.uniform(0.5, 1.5, n).astype(np.float32))
+    v_th = jnp.asarray(RNG.uniform(0.3, 1.2, n).astype(np.float32))
+    sp_k, vf_k = lif_update_fused(cur, v0, alpha, theta, v_th)
+    sp_r, vf_r = lif_update_fused_ref(cur, v0, alpha, theta, v_th)
+    np.testing.assert_allclose(np.asarray(sp_k), np.asarray(sp_r), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(vf_k), np.asarray(vf_r), rtol=1e-5, atol=1e-5)
+
+
+def test_lif_op_multidim_with_channel_params():
+    """lif_op handles (T, OC, OI) conv maps with per-channel params."""
+    t, oc, oi = 5, 6, 33
+    cur = jnp.asarray(RNG.normal(size=(t, oc, oi)).astype(np.float32))
+    p = init_lif_params((oc, 1), alpha=0.8, theta=0.7, v_th=0.4)
+    sp_k, vf_k = lif_op(cur, p)
+    from repro.core.lif import lif_unroll
+
+    sp_r, vf_r = lif_unroll(cur, p)
+    np.testing.assert_allclose(np.asarray(sp_k), np.asarray(sp_r), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(vf_k), np.asarray(vf_r), rtol=1e-5, atol=1e-5)
