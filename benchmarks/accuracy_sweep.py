@@ -19,10 +19,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api import compile_snn
 from repro.configs.saocds_amc import CONFIG as SNN_CONFIG
 from repro.data.pipeline import sigma_delta_encode_np
 from repro.data.radioml import generate_batch
-from repro.models.snn import snn_forward_batch
 from repro.train.lsq import lsq_fake_quant
 from repro.train.pruning import make_mask_pytree
 from repro.train.trainer import SNNTrainer, TrainerConfig
@@ -40,7 +40,8 @@ def _eval(params, cfg, masks=None, quant=False, snr=10.0, n=128, seed=999):
     if quant:
         qfn = lambda w: lsq_fake_quant(
             w, jnp.maximum(jnp.abs(w).max() / (2**15 - 1), 1e-9), 16)
-    logits = snn_forward_batch(params, frames, cfg, masks, qfn)
+    logits = compile_snn(cfg).apply_batch(
+        params, frames, "dense", masks=masks, quant_fn=qfn)
     return np.asarray(logits.argmax(-1)), labels
 
 

@@ -5,6 +5,10 @@ body in Python); the real claims are (a) allclose vs the jnp oracle at
 every shape, and (b) the block-skip ratio — the fraction of (OC-tile x
 row-block) tiles the static schedule drops, which is the on-TPU work
 saving of the paper's sparsity-aware dataflow.
+
+Also benches the whole network once per execution backend through the
+unified ``SNNProgram`` graph (dense / goap / pallas), asserting that the
+interchangeable backends produce identical logits.
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api import SNNConfig, compile_snn, init_snn
 from repro.core.goap import conv1d_dense_oracle
 from repro.core.lif import init_lif_params
 from repro.core.sparse_format import block_sparse_from_dense
@@ -96,6 +101,29 @@ def run() -> dict:
                          + jnp.abs(vf - rvf).max()),
         "wall_ms": _time(lambda c: lif_op(c, lif), cur) * 1e3,
     })
+
+    # whole-network forward, one row per SNNProgram backend (reduced config
+    # so the interpret-mode pallas path stays fast on CPU)
+    from repro.train.pruning import make_mask_pytree
+
+    cfg = SNNConfig(conv_specs=((5, 2, 8), (5, 8, 16)), pool=2,
+                    fc_specs=((16 * 8, 32), (32, 11)), input_width=32,
+                    timesteps=4)
+    program = compile_snn(cfg)
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    masks = make_mask_pytree(params, 0.25)
+    frames = jnp.asarray((rng.random((cfg.timesteps, 2, cfg.input_width)) < 0.5)
+                         .astype(np.float32))
+    ref = program.apply(params, frames, "dense", masks=masks)
+    for backend in ("dense", "goap", "pallas"):
+        bound = program.bind(params, backend, masks=masks)
+        out = bound(frames)
+        rows.append({
+            "kernel": f"program/{backend}",
+            "shape": f"{len(cfg.conv_specs)}conv+{len(cfg.fc_specs)}fc",
+            "max_err": float(jnp.abs(out - ref).max()),
+            "wall_ms": _time(bound, frames) * 1e3,
+        })
     return {"rows": rows}
 
 

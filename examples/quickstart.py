@@ -1,11 +1,13 @@
-"""Quickstart: the paper's pipeline in ~60 lines.
+"""Quickstart: the paper's pipeline through the unified SNNProgram API.
 
 1. generate synthetic RadioML I/Q frames,
 2. Σ-Δ encode them into binary spike frames,
-3. run the SNN classifier densely (training path),
-4. prune + convert to the compressed COO form and run the sparse GOAP
-   inference path (the accelerator dataflow),
-5. verify both paths agree and report the paper's event counts.
+3. compile the SNNConfig into an ``SNNProgram`` (one model definition),
+4. run it through interchangeable execution backends — ``dense`` (training
+   oracle), ``goap`` (the accelerator's sparsity-aware dataflow), and
+   ``stream`` (the faithful Algorithm-2 emulator with the paper's
+   iteration counters),
+5. verify all backends agree and report the paper's event counts.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,24 +16,22 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api import compile_snn, init_snn, stream_totals
 from repro.configs.saocds_amc import CONFIG as SNN_CONFIG
 from repro.core.cost_model import bits_fetched, goap_conv_counts, sw_conv_counts
 from repro.core.saocds import pad_same
+from repro.core.sparse_format import coo_from_dense
 from repro.data.pipeline import sigma_delta_encode_np
 from repro.data.radioml import MODULATIONS, generate_batch
-from repro.models.snn import (
-    init_snn,
-    snn_forward_batch,
-    snn_forward_sparse,
-    sparsify_params,
-)
 from repro.train.pruning import make_mask_pytree
 
 
 def main():
     cfg = SNN_CONFIG
+    program = compile_snn(cfg)
     print(f"SNN: convs {cfg.conv_specs}, FCs {cfg.fc_specs}, "
           f"T={cfg.timesteps} timesteps, {len(MODULATIONS)} classes")
+    print("layer graph:", " -> ".join(s.name for s in program.layers))
 
     # 1-2. data -> spikes
     iq, labels, snrs = generate_batch(seed=0, batch=8, snr_db=10.0)
@@ -39,32 +39,42 @@ def main():
     print(f"I/Q {iq.shape} -> spike frames {frames.shape} "
           f"(density {frames.mean():.2f})")
 
-    # 3. dense forward (the training path)
+    # 3. dense forward (the differentiable training backend)
     params = init_snn(jax.random.PRNGKey(0), cfg)
-    dense_logits = snn_forward_batch(params, jnp.asarray(frames), cfg)
+    dense_logits = program.apply_batch(params, jnp.asarray(frames), "dense")
 
-    # 4. prune to 50% + sparse GOAP forward (the accelerator dataflow)
+    # 4. prune to 50%; the same program now runs the accelerator dataflow
     masks = make_mask_pytree(params, 0.5)
-    sparse = sparsify_params(params, masks)
-    masked_logits = snn_forward_batch(params, jnp.asarray(frames), cfg, masks)
-    sparse_logits = jax.vmap(
-        lambda f: snn_forward_sparse(sparse, f, cfg))(jnp.asarray(frames))
+    masked_logits = program.apply_batch(
+        params, jnp.asarray(frames), "dense", masks=masks)
+    goap_logits = program.apply_batch(
+        params, jnp.asarray(frames), "goap", masks=masks)
 
-    # 5. the sparse dataflow computes exactly the masked dense result
-    err = float(jnp.abs(sparse_logits - masked_logits).max())
-    print(f"GOAP sparse path == masked dense path: max err {err:.2e}")
+    # 5. every backend computes exactly the masked dense result
+    err = float(jnp.abs(goap_logits - masked_logits).max())
+    print(f"GOAP backend == masked dense backend: max err {err:.2e}")
     assert err < 1e-3
 
+    # the streaming emulator returns the paper's Tables I/III counters
+    _, counters = program.apply(params, jnp.asarray(frames[0]), "stream",
+                                masks=masks, return_counters=True)
+    totals = stream_totals(counters)
+    print(f"stream schedule: {totals['compute_iters']} compute + "
+          f"{totals['extra_iters']} extra + {totals['empty_iters']} empty "
+          f"iterations/timestep, {float(totals['accumulations']):.0f} gated "
+          f"accumulations for one sample")
+
     # paper Table I-style counts on this batch's first conv layer
-    coo = sparse["conv"][0]["coo"]
+    kw, ic, oc = cfg.conv_specs[0]
+    coo = coo_from_dense(np.asarray(params["conv"][0]["w"] * masks["conv"][0]))
     f0 = np.asarray(pad_same(jnp.asarray(frames[0]), coo.kw))
-    sw = sw_conv_counts(f0, (coo.kw, coo.ic, coo.oc))
+    sw = sw_conv_counts(f0, (kw, ic, oc))
     gp = goap_conv_counts(f0, coo)
     print(f"layer-1 events for one sample: SW accum={sw.accumulations} "
           f"bits={bits_fetched(sw)}  vs  GOAP accum={gp.accumulations} "
           f"bits={bits_fetched(gp)} "
           f"({bits_fetched(gp) / bits_fetched(sw) * 100:.1f}% traffic)")
-    print("predictions:", np.asarray(sparse_logits.argmax(-1)))
+    print("predictions:", np.asarray(goap_logits.argmax(-1)))
 
 
 if __name__ == "__main__":

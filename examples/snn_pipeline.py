@@ -7,6 +7,12 @@ maps that structure onto a JAX device mesh: a 4-stage ``spmd_pipeline``
 through ``ppermute`` handoffs on a fixed tick schedule — bubbles included
 as explicit no-op slots, the paper's precomputed empty/extra iterations.
 
+Every stage is built from the same shared ``LayerSpec`` graph that the
+single-device forward executes (``compile_snn`` -> ``SNNProgram``): the
+pipeline partitions the graph (``conv_block(i)`` / ``head_layers()``) and
+runs each slice through the dense backend — no layer is re-implemented
+here.
+
 Needs >=4 devices, so it re-execs itself with
 ``xla_force_host_platform_device_count=4`` (CPU).
 
@@ -22,64 +28,45 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
 
+from repro.api import compile_snn, init_snn
+from repro.compat import AxisType, make_mesh
 from repro.configs.saocds_amc import CONFIG as SNN_CONFIG
 from repro.data.pipeline import sigma_delta_encode_np
 from repro.data.radioml import generate_batch
 from repro.distributed.pipeline import spmd_pipeline
-from repro.models.snn import init_snn, snn_forward_batch
 
 
 def main():
     cfg = SNN_CONFIG
+    program = compile_snn(cfg)
     params = init_snn(jax.random.PRNGKey(0), cfg)
-    mesh = jax.make_mesh((4,), ("stage",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((4,), ("stage",), axis_types=(AxisType.Auto,))
 
     # heterogeneous stages share one fixed-width buffer — the software
     # analogue of the accelerator's fixed inter-layer stream width.
     # buffer: (T, C_max, W_max) with C_max=64, W_max=128
     t, cmax, wmax = cfg.timesteps, 64, cfg.input_width
 
-    from repro.core.goap import conv1d_dense_oracle
-    from repro.core.lif import lif_step
-    from repro.core.saocds import max_pool_spikes, pad_same
-
     def conv_stage(li):
-        spec = cfg.conv_specs[li]
+        # the (Conv1dLIF, MaxPool) slice of the shared layer graph
+        block = program.conv_block(li)
+        conv = block[0]
         w_in = cfg.input_width // (cfg.pool ** li)
 
         def fn(p, buf):   # buf (T, Cmax, Wmax)
-            x = buf[:, : spec[1], : w_in]
-            w = p["conv"][li]["w"]
-
-            def step(v, f):
-                cur = conv1d_dense_oracle(f, w)
-                return lif_step(v, cur, p["conv"][li]["lif"])
-
-            v0 = jnp.zeros((spec[2], w_in), jnp.float32)
-            _, spikes = jax.lax.scan(step, v0, pad_same(x, spec[0]))
-            out = max_pool_spikes(spikes, cfg.pool)
+            x = buf[:, : conv.ic, : w_in]
+            out = program.run_layers(block, p, x)
             pad_c, pad_w = cmax - out.shape[1], wmax - out.shape[2]
             return jnp.pad(out, ((0, 0), (0, pad_c), (0, pad_w)))
 
         return fn
 
     def head_stage(p, buf):
+        # FC1 -> FC2 -> readout slice of the same graph
         w_in = cfg.input_width // (cfg.pool ** len(cfg.conv_specs))
-        x = buf[:, : cfg.conv_specs[-1][2], : w_in].reshape(t, -1)
-        logits = jnp.zeros((cfg.n_classes,), jnp.float32)
-        for fi, layer in enumerate(p["fc"]):
-            def fc_step(v, s, w=layer["w"], lif=layer["lif"]):
-                cur = s.astype(w.dtype) @ w
-                v2, out = lif_step(v, cur, lif)
-                return v2, (out, cur)
-            v0 = jnp.zeros((layer["w"].shape[1],), jnp.float32)
-            _, (spikes, currents) = jax.lax.scan(fc_step, v0, x)
-            if fi == len(p["fc"]) - 1:
-                logits = currents.sum(0)
-            else:
-                x = spikes
+        x = buf[:, : cfg.conv_specs[-1][2], : w_in]
+        logits = program.run_layers(program.head_layers(), p, x)
         out = jnp.zeros((t, cmax, wmax), jnp.float32)
         return out.at[0, 0, : cfg.n_classes].set(logits)
 
@@ -104,7 +91,8 @@ def main():
     out = spmd_pipeline(stage_fn, stacked, mbs, mesh, stage_axis="stage")
     pipe_logits = np.asarray(out[:, 0, 0, : cfg.n_classes])
 
-    ref_logits = np.asarray(snn_forward_batch(params, jnp.asarray(frames), cfg))
+    ref_logits = np.asarray(
+        program.apply_batch(params, jnp.asarray(frames), "dense"))
     err = np.abs(pipe_logits - ref_logits).max()
     print(f"4-stage pipeline vs single-device forward: max err {err:.2e}")
     assert err < 1e-3

@@ -1,0 +1,68 @@
+"""Public facade: one model definition, four interchangeable backends.
+
+Everything an application needs to train, compress, and serve the paper's
+SNN AMC classifier through the unified layer-graph API:
+
+    from repro.api import SNNConfig, compile_snn, init_snn
+
+    cfg = SNNConfig()
+    program = compile_snn(cfg)                    # LayerSpec graph, compiled once
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+
+    logits = program.apply(params, frames)                     # dense oracle
+    logits = program.apply(params, frames, backend="goap")     # COO streaming
+    logits = program.apply(params, frames, backend="pallas")   # TPU block-sparse
+    logits, counters = program.apply(params, frames, backend="stream",
+                                     return_counters=True)     # Tables I/III
+
+New execution strategies plug in via ``register_backend`` without touching
+the model definition.
+"""
+from __future__ import annotations
+
+from repro.models.graph import (
+    BoundProgram,
+    Conv1dLIF,
+    FCLIF,
+    LayerSpec,
+    MaxPool,
+    Readout,
+    SNNProgram,
+    available_backends,
+    build_layer_graph,
+    compile_snn,
+    get_backend,
+    register_backend,
+    stream_totals,
+)
+from repro.models.snn import (
+    SNNConfig,
+    density_report,
+    init_snn,
+    param_count,
+    sparsify_params,
+)
+
+__all__ = [
+    # graph / program
+    "LayerSpec",
+    "Conv1dLIF",
+    "MaxPool",
+    "FCLIF",
+    "Readout",
+    "build_layer_graph",
+    "SNNProgram",
+    "BoundProgram",
+    "compile_snn",
+    # backend registry
+    "register_backend",
+    "available_backends",
+    "get_backend",
+    "stream_totals",
+    # model definition / params
+    "SNNConfig",
+    "init_snn",
+    "sparsify_params",
+    "param_count",
+    "density_report",
+]

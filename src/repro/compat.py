@@ -1,0 +1,79 @@
+"""Compatibility layer for jax APIs that moved between releases.
+
+The distribution layer is written against the current jax spelling
+(``jax.sharding.AxisType``, ``jax.shard_map(..., axis_names=, check_vma=)``,
+``AbstractMesh(axis_sizes, axis_names)``).  Older releases (e.g. the 0.4.x
+line pinned in CPU CI containers) spell these ``jax.experimental.shard_map``
+with ``check_rep=``/``auto=``, have no ``AxisType``, and take
+``AbstractMesh(((name, size), ...))``.  Every mesh/shard_map construction in
+this repo goes through the helpers below so both lines work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+__all__ = ["AxisType", "make_mesh", "abstract_mesh", "shard_map"]
+
+
+try:
+    from jax.sharding import AxisType  # jax >= 0.5-era API
+
+    _HAS_AXIS_TYPE = True
+except ImportError:
+    import enum
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    _HAS_AXIS_TYPE = False
+
+
+def make_mesh(axis_shapes, axis_names, axis_types=None):
+    """``jax.make_mesh`` accepting (and dropping, pre-AxisType) axis_types."""
+    if _HAS_AXIS_TYPE:
+        kwargs = {} if axis_types is None else {"axis_types": axis_types}
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """``AbstractMesh`` from parallel sizes/names tuples on any jax line."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        # older signature: one tuple of (name, size) pairs
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f=None, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=True):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        if f is None:
+            return functools.partial(jax.shard_map, **kwargs)
+        return jax.shard_map(f, **kwargs)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f=None, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=True):
+        # axis_names lists the *manual* axes; the old API takes the
+        # complement as ``auto``
+        auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+                if axis_names is not None else frozenset())
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)
+        if f is None:
+            return lambda fn: _shard_map(fn, **kwargs)
+        return _shard_map(f, **kwargs)

@@ -80,7 +80,7 @@ def lif_update_fused(
             jax.ShapeDtypeStruct(cur.shape, currents.dtype),
             jax.ShapeDtypeStruct((cur.shape[1],), currents.dtype),
         ],
-        scratch_shapes=[pltpu.MemorySpace.VMEM((block_n,), currents.dtype)],
+        scratch_shapes=[pltpu.VMEM((block_n,), currents.dtype)],
         interpret=interpret,
         name="lif_update_fused",
     )(cur, v0p, al, th, vt)

@@ -1,0 +1,516 @@
+"""Declarative SNN layer graph with pluggable execution backends.
+
+The paper's core claim is that one fixed SNN can be executed through very
+different dataflows — dense sliding-window baseline vs. the sparsity-aware
+GOAP/SAOCDS streaming pipeline — with identical numerics but very different
+cost (paper §III, Tables I/III).  This module makes that claim structural:
+
+* ``build_layer_graph(cfg)`` derives a tuple of :class:`LayerSpec` nodes
+  (``Conv1dLIF`` / ``MaxPool`` / ``FCLIF`` / ``Readout``) from an
+  :class:`~repro.models.snn.SNNConfig` — the *model definition*;
+* :class:`SNNProgram` compiles the graph once and ``apply(params, frames,
+  backend=...)`` dispatches per-layer to registered backends — the
+  *execution strategy*;
+* backends register via :func:`register_backend(name, layer_kind, fn)` so
+  future execution strategies (sharded, batched-async, quantized) plug in
+  without touching the model.
+
+Built-in backends:
+
+========  ==================================================================
+name      per-layer implementation
+========  ==================================================================
+dense     im2col matmul oracle (differentiable; supports masks + LSQ quant)
+goap      COO weight-priority iteration (vectorized Algorithm-1 gather)
+pallas    static block-sparse TPU kernel (CPU ``interpret=True`` fallback)
+stream    faithful Algorithm-2 schedule interpreter; also returns the
+          compute/extra/empty iteration counters of paper Tables I/III
+========  ==================================================================
+
+``dense`` binds with pure-jax ops and may be traced (jit/grad/vmap over
+params).  ``goap``/``pallas``/``stream`` precompute numpy artifacts (COO
+kernels, static schedules, block-sparse tilings) at bind time and therefore
+need **concrete** weights — bind outside jit, then jit the bound program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.goap import conv1d_dense_oracle, goap_conv_nnz
+from repro.core.lif import lif_step
+from repro.core.saocds import max_pool_spikes, pad_same, schedule_interpreter
+from repro.core.sparse_format import (
+    CooKernel,
+    block_sparse_from_dense,
+    build_schedule,
+    coo_from_dense,
+)
+from repro.models.snn import SNNConfig
+
+__all__ = [
+    "LayerSpec",
+    "Conv1dLIF",
+    "MaxPool",
+    "FCLIF",
+    "Readout",
+    "build_layer_graph",
+    "register_backend",
+    "available_backends",
+    "get_backend",
+    "SNNProgram",
+    "BoundProgram",
+    "compile_snn",
+    "stream_totals",
+]
+
+# Layer kinds understood by the executor.
+KIND_CONV = "conv_lif"
+KIND_POOL = "maxpool"
+KIND_FC = "fc_lif"
+KIND_READOUT = "readout"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One node of the layer graph (pure metadata, no parameters)."""
+
+    kind: str
+    name: str
+    index: int = 0        # position within its param group (conv i / fc i)
+    # conv_lif
+    kw: int = 0
+    ic: int = 0
+    oc: int = 0
+    # maxpool
+    pool: int = 0
+    # fc_lif
+    din: int = 0
+    dout: int = 0
+    # readout
+    mode: str = ""
+
+
+def Conv1dLIF(index: int, kw: int, ic: int, oc: int, name: str = "") -> LayerSpec:
+    return LayerSpec(kind=KIND_CONV, name=name or f"conv{index + 1}",
+                     index=index, kw=kw, ic=ic, oc=oc)
+
+
+def MaxPool(pool: int, name: str = "") -> LayerSpec:
+    return LayerSpec(kind=KIND_POOL, name=name or "pool", pool=pool)
+
+
+def FCLIF(index: int, din: int, dout: int, name: str = "") -> LayerSpec:
+    return LayerSpec(kind=KIND_FC, name=name or f"fc{index + 1}",
+                     index=index, din=din, dout=dout)
+
+
+def Readout(mode: str) -> LayerSpec:
+    return LayerSpec(kind=KIND_READOUT, name="readout", mode=mode)
+
+
+def build_layer_graph(cfg: SNNConfig) -> Tuple[LayerSpec, ...]:
+    """Derive the declarative layer graph from an ``SNNConfig``."""
+    cfg.validate()
+    layers: List[LayerSpec] = []
+    for i, (kw, ic, oc) in enumerate(cfg.conv_specs):
+        layers.append(Conv1dLIF(i, kw, ic, oc))
+        layers.append(MaxPool(cfg.pool, name=f"pool{i + 1}"))
+    for i, (din, dout) in enumerate(cfg.fc_specs):
+        layers.append(FCLIF(i, din, dout))
+    layers.append(Readout(cfg.readout))
+    return tuple(layers)
+
+
+# ---------------------------------------------------------------------------
+# Backend registry.
+# ---------------------------------------------------------------------------
+
+# A backend factory takes (spec, layer_params, cfg=, mask=, quant_fn=) and
+# returns the bound stage callable for that layer.  Stage contracts:
+#   conv_lif: stage(x (T, IC, W))  -> (spikes (T, OC, W), aux dict | None)
+#   maxpool:  stage(x)             -> pooled x
+#   fc_lif:   stage(x (T, ...))    -> (spikes (T, OUT), currents (T, OUT))
+#   readout:  stage((spikes, currents)) -> logits
+BackendFactory = Callable[..., Callable]
+
+# Backends shared by every execution strategy (pooling and readout carry no
+# weights, so there is nothing dataflow-specific about them) register under
+# this pseudo-name; named backends may still override per layer kind.
+COMMON = "common"
+
+_REGISTRY: Dict[Tuple[str, str], BackendFactory] = {}
+
+
+def register_backend(name: str, layer_kind: str, fn: BackendFactory) -> BackendFactory:
+    """Register ``fn`` as backend ``name``'s implementation of ``layer_kind``."""
+    _REGISTRY[(name, layer_kind)] = fn
+    return fn
+
+
+def available_backends() -> Tuple[str, ...]:
+    """Names of all registered (non-common) backends."""
+    return tuple(sorted({n for n, _ in _REGISTRY if n != COMMON}))
+
+
+def get_backend(name: str, layer_kind: str) -> BackendFactory:
+    """Resolve ``(name, layer_kind)``, falling back to the common pool."""
+    if name not in {n for n, _ in _REGISTRY}:
+        raise ValueError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{list(available_backends())}"
+        )
+    fn = _REGISTRY.get((name, layer_kind)) or _REGISTRY.get((COMMON, layer_kind))
+    if fn is None:
+        raise ValueError(
+            f"backend {name!r} has no implementation for layer kind "
+            f"{layer_kind!r}"
+        )
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Bind-time helpers.
+# ---------------------------------------------------------------------------
+
+def _effective_weight(layer_params, mask, quant_fn):
+    w = layer_params["w"]
+    if mask is not None:
+        w = w * mask
+    if quant_fn is not None:
+        w = quant_fn(w)
+    return w
+
+
+def _concrete_weight(spec: LayerSpec, layer_params, mask, quant_fn) -> np.ndarray:
+    """Numpy weights for backends that precompute sparse artifacts."""
+    try:
+        return np.asarray(_effective_weight(layer_params, mask, quant_fn))
+    except jax.errors.TracerArrayConversionError as e:
+        raise ValueError(
+            f"layer {spec.name!r}: this backend precomputes a sparse layout "
+            "from concrete weights and cannot bind under jit/vmap/grad — "
+            "bind the program outside the traced region (the 'dense' "
+            "backend is fully traceable)"
+        ) from e
+
+
+def _layer_coo(spec: LayerSpec, layer_params, mask, quant_fn) -> CooKernel:
+    # accept pre-sparsified params ({"coo": ...}) as produced by
+    # ``sparsify_params`` as well as raw dense params ({"w": ...})
+    if "coo" in layer_params:
+        return layer_params["coo"]
+    return coo_from_dense(_concrete_weight(spec, layer_params, mask, quant_fn))
+
+
+# ---------------------------------------------------------------------------
+# Common (backend-independent) stages.
+# ---------------------------------------------------------------------------
+
+def _common_maxpool(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
+    def stage(x):
+        return max_pool_spikes(x, spec.pool)
+    return stage
+
+
+def _common_readout(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
+    def stage(fc_out):
+        spikes, currents = fc_out
+        if spec.mode == "current_sum":
+            return currents.sum(axis=0)
+        return spikes.sum(axis=0)
+    return stage
+
+
+register_backend(COMMON, KIND_POOL, _common_maxpool)
+register_backend(COMMON, KIND_READOUT, _common_readout)
+
+
+# ---------------------------------------------------------------------------
+# dense backend — im2col oracle, differentiable (training path).
+# ---------------------------------------------------------------------------
+
+def _dense_conv(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
+    w = _effective_weight(layer_params, mask, quant_fn)
+    lif = layer_params["lif"]
+
+    def stage(x):
+        padded = pad_same(x, spec.kw)
+
+        def step(v, ifm):
+            return lif_step(v, conv1d_dense_oracle(ifm, w), lif)
+
+        v0 = jnp.zeros((spec.oc, x.shape[-1]), dtype=w.dtype)
+        _, spikes = jax.lax.scan(step, v0, padded)
+        return spikes, None
+
+    return stage
+
+
+def _dense_fc(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
+    w = _effective_weight(layer_params, mask, quant_fn)
+    lif = layer_params["lif"]
+
+    def stage(x):
+        x = x.reshape(x.shape[0], -1)
+
+        def step(v, s):
+            cur = s.astype(w.dtype) @ w
+            v_next, out = lif_step(v, cur, lif)
+            return v_next, (out, cur)
+
+        v0 = jnp.zeros((w.shape[1],), dtype=w.dtype)
+        _, (spikes, currents) = jax.lax.scan(step, v0, x)
+        return spikes, currents
+
+    return stage
+
+
+register_backend("dense", KIND_CONV, _dense_conv)
+register_backend("dense", KIND_FC, _dense_fc)
+
+
+# ---------------------------------------------------------------------------
+# goap backend — COO weight-priority iteration (vectorized Algorithm 1).
+# ---------------------------------------------------------------------------
+
+def _goap_conv(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
+    coo = _layer_coo(spec, layer_params, mask, quant_fn)
+    lif = layer_params["lif"]
+
+    def stage(x):
+        padded = pad_same(x, coo.kw)
+
+        def step(v, ifm):
+            return lif_step(v, goap_conv_nnz(ifm, coo), lif)
+
+        v0 = jnp.zeros((coo.oc, x.shape[-1]), dtype=jnp.float32)
+        _, spikes = jax.lax.scan(step, v0, padded)
+        return spikes, None
+
+    return stage
+
+
+register_backend("goap", KIND_CONV, _goap_conv)
+# FC layers use the weight-mask method (paper §III-B): zeros kept in the
+# matrix *are* the mask, so the dense FC stage is numerically the WM stage.
+register_backend("goap", KIND_FC, _dense_fc)
+
+
+# ---------------------------------------------------------------------------
+# pallas backend — static block-sparse TPU kernel (interpret=True on CPU).
+# ---------------------------------------------------------------------------
+
+PALLAS_BLOCK_OC = 8
+PALLAS_BLOCK_K = 32
+
+
+def _pallas_conv(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
+    # the Pallas path needs the dense layout to re-block; recover it from a
+    # pre-sparsified COO kernel if that is all we were given
+    if "coo" in layer_params:
+        from repro.core.sparse_format import coo_to_dense
+        w = coo_to_dense(layer_params["coo"]).astype(np.float32)
+    else:
+        w = _concrete_weight(spec, layer_params, mask, quant_fn)
+    bs = block_sparse_from_dense(w, block_oc=PALLAS_BLOCK_OC, block_k=PALLAS_BLOCK_K)
+    lif = layer_params["lif"]
+
+    from repro.kernels.ops import goap_conv_op
+
+    def stage(x):
+        padded = pad_same(x, bs.kw)
+
+        def step(v, ifm):
+            return lif_step(v, goap_conv_op(ifm, bs), lif)
+
+        v0 = jnp.zeros((bs.oc, x.shape[-1]), dtype=jnp.float32)
+        _, spikes = jax.lax.scan(step, v0, padded)
+        return spikes, None
+
+    return stage
+
+
+def _pallas_fc(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
+    w = jnp.asarray(_effective_weight(layer_params, mask, quant_fn))
+    lif = layer_params["lif"]
+
+    from repro.kernels.ops import lif_op, wm_fc_op
+
+    def stage(x):
+        x = x.reshape(x.shape[0], -1)
+        # FC currents are memoryless in T: one batched WM matmul, then the
+        # fused LIF kernel integrates over time.
+        currents = wm_fc_op(x.astype(w.dtype), w)
+        spikes, _ = lif_op(currents, lif)
+        return spikes, currents
+
+    return stage
+
+
+register_backend("pallas", KIND_CONV, _pallas_conv)
+register_backend("pallas", KIND_FC, _pallas_fc)
+
+
+# ---------------------------------------------------------------------------
+# stream backend — faithful Algorithm-2 emulator with Tables I/III counters.
+# ---------------------------------------------------------------------------
+
+def _stream_conv(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
+    coo = _layer_coo(spec, layer_params, mask, quant_fn)
+    sched = build_schedule(coo)
+    lif = layer_params["lif"]
+
+    def stage(x):
+        padded = pad_same(x, coo.kw)
+        oi = x.shape[-1]
+        spikes, _, counts = schedule_interpreter(padded, sched, lif, oi, coo.oc)
+        return spikes, counts
+
+    return stage
+
+
+register_backend("stream", KIND_CONV, _stream_conv)
+register_backend("stream", KIND_FC, _dense_fc)  # WM method, see goap above
+
+
+def stream_totals(counters: Dict[str, Dict[str, Any]]) -> Dict[str, Any]:
+    """Aggregate per-layer stream counters into whole-network totals."""
+    totals = {"compute_iters": 0, "extra_iters": 0, "empty_iters": 0,
+              "reps_per_timestep": 0, "accumulations": 0.0}
+    for counts in counters.values():
+        totals["compute_iters"] += counts["compute_iters"]
+        totals["extra_iters"] += counts["extra_iters"]
+        totals["empty_iters"] += counts["empty_iters"]
+        totals["reps_per_timestep"] += counts["reps_per_timestep"]
+        totals["accumulations"] = totals["accumulations"] + counts["accumulations"]
+    return totals
+
+
+# ---------------------------------------------------------------------------
+# The compiled program.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BoundProgram:
+    """A layer graph bound to parameters under one backend."""
+
+    backend: str
+    stages: Tuple[Tuple[LayerSpec, Callable], ...]
+
+    def run(self, frames: jax.Array) -> Tuple[jax.Array, Dict[str, Dict]]:
+        """(T, IC0, W) frames -> (logits, per-conv-layer counters)."""
+        x = frames
+        fc_out = None
+        logits = None
+        counters: Dict[str, Dict] = {}
+        for spec, stage in self.stages:
+            if spec.kind == KIND_CONV:
+                x, aux = stage(x)
+                if aux is not None:
+                    counters[spec.name] = aux
+            elif spec.kind == KIND_POOL:
+                x = stage(x)
+            elif spec.kind == KIND_FC:
+                spikes, currents = stage(x)
+                fc_out = (spikes, currents)
+                x = spikes
+            elif spec.kind == KIND_READOUT:
+                logits = stage(fc_out)
+            else:  # pragma: no cover - specs are built internally
+                raise ValueError(f"unknown layer kind {spec.kind!r}")
+        return (logits if logits is not None else x), counters
+
+    def __call__(self, frames: jax.Array) -> jax.Array:
+        return self.run(frames)[0]
+
+    def batch(self, frames_b: jax.Array) -> jax.Array:
+        """(B, T, IC0, W) -> (B, n_classes)."""
+        return jax.vmap(lambda f: self.run(f)[0])(frames_b)
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNProgram:
+    """An ``SNNConfig`` compiled into an executable layer graph."""
+
+    cfg: SNNConfig
+    layers: Tuple[LayerSpec, ...]
+
+    @classmethod
+    def from_config(cls, cfg: SNNConfig) -> "SNNProgram":
+        return cls(cfg=cfg, layers=build_layer_graph(cfg))
+
+    # -- binding / execution ------------------------------------------------
+
+    def bind(self, params, backend: str = "dense", *, masks=None,
+             quant_fn=None, layers: Optional[Sequence[LayerSpec]] = None) -> BoundProgram:
+        """Resolve every layer against ``backend`` and close over params."""
+        stages = []
+        for spec in (self.layers if layers is None else tuple(layers)):
+            factory = get_backend(backend, spec.kind)
+            lp, m = self._layer_params(spec, params, masks)
+            stages.append((spec, factory(spec, lp, cfg=self.cfg, mask=m,
+                                         quant_fn=quant_fn)))
+        return BoundProgram(backend=backend, stages=tuple(stages))
+
+    def apply(self, params, frames: jax.Array, backend: str = "dense", *,
+              masks=None, quant_fn=None, return_counters: bool = False):
+        """One sample (T, IC0, W) -> logits (n_classes,).
+
+        With ``return_counters=True`` also returns the per-conv-layer
+        iteration counters (populated by the ``stream`` backend: the
+        compute/extra/empty reps and gated accumulation counts of paper
+        Tables I/III; empty for the other backends).
+        """
+        bound = self.bind(params, backend, masks=masks, quant_fn=quant_fn)
+        logits, counters = bound.run(frames)
+        return (logits, counters) if return_counters else logits
+
+    def apply_batch(self, params, frames_b: jax.Array, backend: str = "dense",
+                    *, masks=None, quant_fn=None) -> jax.Array:
+        """(B, T, IC0, W) -> (B, n_classes)."""
+        return self.bind(params, backend, masks=masks,
+                         quant_fn=quant_fn).batch(frames_b)
+
+    def run_layers(self, layers: Sequence[LayerSpec], params, x: jax.Array,
+                   backend: str = "dense", *, masks=None, quant_fn=None):
+        """Execute a contiguous slice of the graph (pipeline stages)."""
+        return self.bind(params, backend, masks=masks, quant_fn=quant_fn,
+                         layers=layers).run(x)[0]
+
+    # -- graph slicing (pipeline-parallel stage construction) ---------------
+
+    def conv_block(self, i: int) -> Tuple[LayerSpec, ...]:
+        """The (Conv1dLIF, MaxPool) pair for conv stage ``i``."""
+        convs = [j for j, s in enumerate(self.layers) if s.kind == KIND_CONV]
+        j = convs[i]
+        return self.layers[j:j + 2]
+
+    def head_layers(self) -> Tuple[LayerSpec, ...]:
+        """Everything from the first FC layer through the readout."""
+        first_fc = next(j for j, s in enumerate(self.layers) if s.kind == KIND_FC)
+        return self.layers[first_fc:]
+
+    # -- params plumbing ----------------------------------------------------
+
+    @staticmethod
+    def _layer_params(spec: LayerSpec, params, masks):
+        if spec.kind == KIND_CONV:
+            return params["conv"][spec.index], (
+                masks["conv"][spec.index] if masks else None)
+        if spec.kind == KIND_FC:
+            return params["fc"][spec.index], (
+                masks["fc"][spec.index] if masks else None)
+        return None, None
+
+
+@functools.lru_cache(maxsize=None)
+def compile_snn(cfg: SNNConfig) -> SNNProgram:
+    """Compile (and cache) the layer graph for ``cfg``."""
+    return SNNProgram.from_config(cfg)

@@ -9,14 +9,16 @@
     readout: sum over T of FC2 input currents ("current_sum", default) or
              FC2 LIF spike counts ("spike_count").
 
-Two forward paths:
+Execution now lives in the unified layer-graph API
+(:mod:`repro.models.graph` / :mod:`repro.api`): ``compile_snn(cfg)``
+produces an ``SNNProgram`` whose ``apply(params, frames, backend=...)``
+dispatches per layer to the registered ``dense`` / ``goap`` / ``pallas`` /
+``stream`` backends.  The legacy entry points below are kept as thin
+deprecated wrappers:
 
-* ``snn_forward``        — dense/differentiable (training): conv via the
-  im2col oracle with an optional pruning mask applied to the weights; LIF
-  with surrogate gradients; supports LSQ fake-quantization of weights.
-* ``snn_forward_sparse`` — inference: pruned kernels converted to COO, conv
-  via the vectorized GOAP path (identical numerics, sparsity-aware
-  semantics).  Used by the serving engine and the streaming emulator.
+* ``snn_forward``        -> ``program.apply(..., backend="dense")``
+* ``snn_forward_batch``  -> ``program.apply_batch(..., backend="dense")``
+* ``snn_forward_sparse`` -> ``program.apply(..., backend="goap")``
 
 All LIF parameters (alpha, theta, v_th) are trainable: per-channel for conv
 layers, per-neuron for FC layers (paper §IV-B).
@@ -24,6 +26,7 @@ layers, per-neuron for FC layers (paper §IV-B).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -31,13 +34,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.goap import conv1d_dense_oracle, goap_conv_nnz
-from repro.core.lif import LIFParams, init_lif_params, lif_step
-from repro.core.saocds import max_pool_spikes, pad_same
-from repro.core.sparse_format import CooKernel, coo_from_dense
+from repro.core.lif import init_lif_params
+from repro.core.sparse_format import coo_from_dense
 
-__all__ = ["SNNConfig", "init_snn", "snn_forward", "snn_forward_sparse",
-           "sparsify_params", "param_count", "density_report"]
+__all__ = ["SNNConfig", "init_snn", "snn_forward", "snn_forward_batch",
+           "snn_forward_sparse", "sparsify_params", "param_count",
+           "density_report"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +111,14 @@ def _masked(w: jax.Array, mask: Optional[jax.Array]) -> jax.Array:
     return w if mask is None else w * mask
 
 
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new} (see repro.api)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 def snn_forward(
     params: Dict[str, Any],
     frames: jax.Array,
@@ -116,59 +126,21 @@ def snn_forward(
     masks: Optional[Dict[str, Any]] = None,
     quant_fn=None,
 ) -> jax.Array:
-    """Dense (training) forward for one sample.
+    """Deprecated: use ``compile_snn(cfg).apply(..., backend="dense")``."""
+    from repro.models.graph import compile_snn
 
-    frames: (T, IC0, W) binary. Returns logits (n_classes,).
-    masks: optional pruning masks matching params structure.
-    quant_fn: optional fake-quant fn applied to each weight (LSQ).
-    """
-    x = frames  # (T, C, W)
-
-    def maybe_quant(w):
-        return w if quant_fn is None else quant_fn(w)
-
-    for li, layer in enumerate(params["conv"]):
-        kw = layer["w"].shape[0]
-        w = maybe_quant(_masked(layer["w"], masks["conv"][li] if masks else None))
-        padded = pad_same(x, kw)  # (T, C, W + kw - 1)
-
-        def conv_step(v, ifm, w=w, lif=layer["lif"]):
-            cur = conv1d_dense_oracle(ifm, w)
-            return lif_step(v, cur, lif)
-
-        oc = w.shape[2]
-        oi = x.shape[-1]
-        v0 = jnp.zeros((oc, oi), dtype=w.dtype)
-        _, spikes = jax.lax.scan(conv_step, v0, padded)
-        x = max_pool_spikes(spikes, cfg.pool)  # (T, OC, W//pool)
-
-    x = x.reshape(x.shape[0], -1)  # (T, flat)
-
-    logits_acc = jnp.zeros((cfg.n_classes,), dtype=x.dtype)
-    for fi, layer in enumerate(params["fc"]):
-        w = maybe_quant(_masked(layer["w"], masks["fc"][fi] if masks else None))
-        is_last = fi == len(params["fc"]) - 1
-
-        def fc_step(v, s, w=w, lif=layer["lif"]):
-            cur = s.astype(w.dtype) @ w
-            v_next, out = lif_step(v, cur, lif)
-            return v_next, (out, cur)
-
-        v0 = jnp.zeros((w.shape[1],), dtype=w.dtype)
-        _, (spikes, currents) = jax.lax.scan(fc_step, v0, x)
-        if is_last:
-            if cfg.readout == "current_sum":
-                logits_acc = currents.sum(axis=0)
-            else:
-                logits_acc = spikes.sum(axis=0)
-        else:
-            x = spikes
-    return logits_acc
+    _deprecated("snn_forward", 'SNNProgram.apply(..., backend="dense")')
+    return compile_snn(cfg).apply(params, frames, "dense",
+                                  masks=masks, quant_fn=quant_fn)
 
 
 def snn_forward_batch(params, frames_b, cfg, masks=None, quant_fn=None):
-    """(B, T, C, W) -> (B, n_classes)."""
-    return jax.vmap(lambda f: snn_forward(params, f, cfg, masks, quant_fn))(frames_b)
+    """Deprecated: use ``compile_snn(cfg).apply_batch(..., backend="dense")``."""
+    from repro.models.graph import compile_snn
+
+    _deprecated("snn_forward_batch", 'SNNProgram.apply_batch(..., backend="dense")')
+    return compile_snn(cfg).apply_batch(params, frames_b, "dense",
+                                        masks=masks, quant_fn=quant_fn)
 
 
 # ---------------------------------------------------------------------------
@@ -199,37 +171,12 @@ def density_report(params, masks=None) -> Dict[str, float]:
 
 
 def snn_forward_sparse(sparse_params, frames: jax.Array, cfg: SNNConfig) -> jax.Array:
-    """GOAP inference forward for one sample: (T, IC0, W) -> (n_classes,)."""
-    x = frames
+    """Deprecated: use ``compile_snn(cfg).apply(..., backend="goap")``.
 
-    for layer in sparse_params["conv"]:
-        coo: CooKernel = layer["coo"]
-        padded = pad_same(x, coo.kw)
+    Accepts the COO inference form produced by :func:`sparsify_params`
+    (the goap backend also binds straight from dense params + masks).
+    """
+    from repro.models.graph import compile_snn
 
-        def conv_step(v, ifm, coo=coo, lif=layer["lif"]):
-            cur = goap_conv_nnz(ifm, coo)
-            return lif_step(v, cur, lif)
-
-        v0 = jnp.zeros((coo.oc, x.shape[-1]), dtype=jnp.float32)
-        _, spikes = jax.lax.scan(conv_step, v0, padded)
-        x = max_pool_spikes(spikes, cfg.pool)
-
-    x = x.reshape(x.shape[0], -1)
-
-    logits = jnp.zeros((cfg.n_classes,), dtype=jnp.float32)
-    for fi, layer in enumerate(sparse_params["fc"]):
-        w = layer["w"]
-        is_last = fi == len(sparse_params["fc"]) - 1
-
-        def fc_step(v, s, w=w, lif=layer["lif"]):
-            cur = s.astype(w.dtype) @ w
-            v_next, out = lif_step(v, cur, lif)
-            return v_next, (out, cur)
-
-        v0 = jnp.zeros((w.shape[1],), dtype=w.dtype)
-        _, (spikes, currents) = jax.lax.scan(fc_step, v0, x)
-        if is_last:
-            logits = currents.sum(axis=0) if cfg.readout == "current_sum" else spikes.sum(axis=0)
-        else:
-            x = spikes
-    return logits
+    _deprecated("snn_forward_sparse", 'SNNProgram.apply(..., backend="goap")')
+    return compile_snn(cfg).apply(sparse_params, frames, "goap")

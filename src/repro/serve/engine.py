@@ -1,14 +1,17 @@
 """Batched streaming AMC inference engine.
 
 Mirrors the accelerator's deployment mode: a continuous stream of I/Q
-frames is sigma-delta encoded and classified by the sparse (GOAP) SNN
-forward.  Requests are gathered into fixed-size batches (padding the tail)
-— the static-batch discipline is the software analogue of the paper's
-fixed iteration schedule: the jitted program never re-specializes, so the
-pipeline stays warm.
+frames is sigma-delta encoded and classified through the unified
+``SNNProgram`` layer graph.  The execution backend is selectable
+(``goap`` by default — the paper's sparsity-aware dataflow; ``dense`` /
+``pallas`` / ``stream`` plug in unchanged).  Requests are gathered into
+fixed-size batches (padding the tail) — the static-batch discipline is the
+software analogue of the paper's fixed iteration schedule: the jitted
+program never re-specializes, so the pipeline stays warm.
 
 The engine reports the cost-model counters (accumulations, fetched bits)
-for every processed batch, which is what the power model consumes.
+for every processed batch, which is what the power model consumes, and
+records which backend served each batch.
 """
 from __future__ import annotations
 
@@ -25,7 +28,8 @@ from repro.core.cost_model import bits_fetched, fc_wm_counts, goap_conv_counts
 from repro.core.saocds import pad_same
 from repro.core.sparse_format import weight_mask_from_dense
 from repro.data.pipeline import sigma_delta_encode_np
-from repro.models.snn import SNNConfig, snn_forward_sparse, sparsify_params
+from repro.models.graph import compile_snn
+from repro.models.snn import SNNConfig, sparsify_params
 
 __all__ = ["AMCServeEngine", "ServeStats"]
 
@@ -37,6 +41,8 @@ class ServeStats:
     accumulations: int = 0
     fetched_bits: int = 0
     wall_s: float = 0.0
+    backend: str = ""
+    batch_backends: List[str] = dataclasses.field(default_factory=list)
 
     def throughput_samples_per_s(self, frame_len: int = 128) -> float:
         if self.wall_s == 0:
@@ -52,15 +58,18 @@ class AMCServeEngine:
         masks=None,
         batch_size: int = 32,
         count_activity: bool = False,
+        backend: str = "goap",
     ):
         self.cfg = cfg
         self.batch_size = batch_size
         self.count_activity = count_activity
-        self.sparse = sparsify_params(params, masks)
-        self.stats = ServeStats()
-        self._fwd = jax.jit(
-            lambda frames: jax.vmap(lambda f: snn_forward_sparse(self.sparse, f, cfg))(frames)
-        )
+        self.backend = backend
+        self.program = compile_snn(cfg)
+        # COO form only feeds the _count() activity hooks
+        self.sparse = sparsify_params(params, masks) if count_activity else None
+        self.stats = ServeStats(backend=backend)
+        bound = self.program.bind(params, backend, masks=masks)
+        self._fwd = jax.jit(bound.batch)
 
     def classify(self, iq: np.ndarray) -> np.ndarray:
         """iq: (N, 2, L) -> predicted class ids (N,). Batches internally."""
@@ -76,6 +85,7 @@ class AMCServeEngine:
             logits = np.asarray(self._fwd(jnp.asarray(frames)))
             preds[s : s + self.batch_size - pad] = logits[: self.batch_size - pad].argmax(-1)
             self.stats.batches += 1
+            self.stats.batch_backends.append(self.backend)
             if self.count_activity:
                 self._count(frames[: self.batch_size - pad])
         self.stats.requests += n

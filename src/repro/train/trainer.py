@@ -25,7 +25,8 @@ import jax.numpy as jnp
 
 from repro.data.pipeline import sigma_delta_encode_np
 from repro.data.radioml import generate_batch
-from repro.models.snn import SNNConfig, init_snn, snn_forward
+from repro.models.graph import compile_snn
+from repro.models.snn import SNNConfig, init_snn
 from .checkpoint import CheckpointManager
 from .lsq import init_lsq_scales, lsq_fake_quant
 from .optimizer import adamw, apply_updates, clip_by_global_norm
@@ -60,6 +61,10 @@ class TrainerConfig:
 
 
 def _loss_fn(params, lsq_scales, frames, labels, cfg: SNNConfig, masks, use_lsq, bits):
+    # the dense backend is the differentiable training path (im2col oracle,
+    # surrogate-gradient LIF, pure-jax bind -> traceable under jit/grad)
+    program = compile_snn(cfg)
+
     def fwd_one(f):
         if use_lsq:
             # per-layer scales are threaded by closure index through the
@@ -72,8 +77,8 @@ def _loss_fn(params, lsq_scales, frames, labels, cfg: SNNConfig, masks, use_lsq,
                 idx["i"] += 1
                 return lsq_fake_quant(w, s, bits)
 
-            return snn_forward(params, f, cfg, masks, quant_fn)
-        return snn_forward(params, f, cfg, masks)
+            return program.apply(params, f, "dense", masks=masks, quant_fn=quant_fn)
+        return program.apply(params, f, "dense", masks=masks)
 
     logits = jax.vmap(fwd_one)(frames)
     logp = jax.nn.log_softmax(logits)
@@ -246,9 +251,10 @@ class SNNTrainer:
 
     def _eval_logits(self, frames, use_masks):
         masks = self.masks if use_masks else None
+        program = compile_snn(self.model_cfg)
 
         @jax.jit
         def fwd(params, frames, masks):
-            return jax.vmap(lambda f: snn_forward(params, f, self.model_cfg, masks))(frames)
+            return program.apply_batch(params, frames, "dense", masks=masks)
 
         return fwd(self.params, frames, masks)

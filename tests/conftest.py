@@ -1,10 +1,17 @@
 import numpy as np
 import pytest
-from hypothesis import settings
 
-# Keep hypothesis fast and deterministic on CI-class CPU containers.
-settings.register_profile("ci", max_examples=25, deadline=None, derandomize=True)
-settings.load_profile("ci")
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    # Minimal environments run without hypothesis: property tests skip via
+    # the tests/_hyp.py shim and the profile setup below is a no-op.
+    settings = None
+
+if settings is not None:
+    # Keep hypothesis fast and deterministic on CI-class CPU containers.
+    settings.register_profile("ci", max_examples=25, deadline=None, derandomize=True)
+    settings.load_profile("ci")
 
 
 @pytest.fixture

@@ -1,0 +1,202 @@
+"""Cross-backend equivalence for the unified layer-graph execution API.
+
+The paper's central claim made executable: one model definition
+(``SNNConfig`` -> ``LayerSpec`` graph) produces identical logits through
+every registered execution dataflow — dense sliding-window oracle, COO
+GOAP, block-sparse Pallas (interpret mode on CPU), and the faithful
+Algorithm-2 streaming emulator.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import (
+    SNNConfig,
+    available_backends,
+    build_layer_graph,
+    compile_snn,
+    get_backend,
+    init_snn,
+    register_backend,
+    stream_totals,
+)
+from repro.models.snn import (
+    snn_forward,
+    snn_forward_batch,
+    snn_forward_sparse,
+    sparsify_params,
+)
+from repro.train.pruning import make_mask_pytree
+
+# Reduced config: same topology as the paper's model, smoke-test sized.
+CFG = SNNConfig(
+    conv_specs=((3, 2, 4), (3, 4, 8)),
+    pool=2,
+    fc_specs=((32, 16), (16, 5)),
+    input_width=16,
+    timesteps=3,
+    n_classes=5,
+)
+
+ALL_BACKENDS = ("dense", "goap", "pallas", "stream")
+
+
+def _frames(seed=0, density=0.5):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        (rng.random((CFG.timesteps, CFG.conv_specs[0][1], CFG.input_width))
+         < density).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_snn(jax.random.PRNGKey(0), CFG)
+    masks = make_mask_pytree(params, 0.5)
+    return compile_snn(CFG), params, masks
+
+
+# ---------------------------------------------------------------------------
+# graph structure
+# ---------------------------------------------------------------------------
+
+def test_layer_graph_shape():
+    layers = build_layer_graph(CFG)
+    kinds = [s.kind for s in layers]
+    assert kinds == ["conv_lif", "maxpool", "conv_lif", "maxpool",
+                     "fc_lif", "fc_lif", "readout"]
+    assert layers[-1].mode == CFG.readout
+
+
+def test_registry_knows_all_builtin_backends():
+    assert set(ALL_BACKENDS) <= set(available_backends())
+
+
+def test_unknown_backend_raises_value_error(setup):
+    program, params, _ = setup
+    with pytest.raises(ValueError, match="unknown backend 'warp'"):
+        program.apply(params, _frames(), "warp")
+    with pytest.raises(ValueError, match="registered backends"):
+        get_backend("warp", "conv_lif")
+
+
+def test_register_backend_plugs_in(setup):
+    from repro.models import graph
+
+    program, params, masks = setup
+    snapshot = dict(graph._REGISTRY)
+    try:
+        register_backend("dense-alias", "conv_lif", get_backend("dense", "conv_lif"))
+        register_backend("dense-alias", "fc_lif", get_backend("dense", "fc_lif"))
+        ref = program.apply(params, _frames(), "dense", masks=masks)
+        out = program.apply(params, _frames(), "dense-alias", masks=masks)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+    finally:
+        graph._REGISTRY.clear()
+        graph._REGISTRY.update(snapshot)
+
+
+# ---------------------------------------------------------------------------
+# cross-backend equivalence (the acceptance criterion: atol <= 1e-5)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS[1:])
+@pytest.mark.parametrize("density", [1.0, 0.5, 0.1])
+def test_backend_matches_dense_oracle(setup, backend, density):
+    program, params, _ = setup
+    masks = None if density == 1.0 else make_mask_pytree(params, density)
+    frames = _frames(seed=int(density * 10))
+    ref = program.apply(params, frames, "dense", masks=masks)
+    out = program.apply(params, frames, backend, masks=masks)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_batch_equivalence(setup):
+    program, params, masks = setup
+    frames_b = jnp.stack([_frames(seed=s) for s in range(3)])
+    ref = program.apply_batch(params, frames_b, "dense", masks=masks)
+    for backend in ("goap", "pallas"):
+        out = program.apply_batch(params, frames_b, backend, masks=masks)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_dense_backend_is_differentiable(setup):
+    program, params, masks = setup
+    g = jax.grad(
+        lambda p: program.apply(p, _frames(), "dense", masks=masks).sum()
+    )(params)
+    total = sum(float(jnp.abs(x).sum()) for x in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(total) and total > 0
+
+
+# ---------------------------------------------------------------------------
+# stream backend: the Tables I/III iteration counters
+# ---------------------------------------------------------------------------
+
+def test_stream_returns_iteration_counters(setup):
+    program, params, masks = setup
+    logits, counters = program.apply(
+        params, _frames(), "stream", masks=masks, return_counters=True)
+    assert set(counters) == {"conv1", "conv2"}
+    for counts in counters.values():
+        for key in ("compute_iters", "extra_iters", "empty_iters",
+                    "reps_per_timestep", "accumulations", "timesteps"):
+            assert key in counts
+        assert (counts["compute_iters"] + counts["extra_iters"]
+                + counts["empty_iters"] == counts["reps_per_timestep"])
+    totals = stream_totals(counters)
+    assert totals["compute_iters"] > 0
+    assert float(totals["accumulations"]) > 0
+
+
+def test_other_backends_return_empty_counters(setup):
+    program, params, masks = setup
+    for backend in ("dense", "goap", "pallas"):
+        _, counters = program.apply(
+            params, _frames(), backend, masks=masks, return_counters=True)
+        assert counters == {}
+
+
+# ---------------------------------------------------------------------------
+# pre-sparsified params and graph slicing
+# ---------------------------------------------------------------------------
+
+def test_goap_accepts_presparsified_params(setup):
+    program, params, masks = setup
+    sparse = sparsify_params(params, masks)
+    ref = program.apply(params, _frames(), "dense", masks=masks)
+    out = program.apply(sparse, _frames(), "goap")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_run_layers_slices_compose_to_full_forward(setup):
+    program, params, masks = setup
+    frames = _frames()
+    x = frames
+    for i in range(len(CFG.conv_specs)):
+        x = program.run_layers(program.conv_block(i), params, x, masks=masks)
+    logits = program.run_layers(program.head_layers(), params, x, masks=masks)
+    ref = program.apply(params, frames, "dense", masks=masks)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# deprecated wrappers
+# ---------------------------------------------------------------------------
+
+def test_legacy_wrappers_warn_and_agree(setup):
+    program, params, masks = setup
+    frames = _frames()
+    ref = program.apply(params, frames, "dense", masks=masks)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        out_fwd = snn_forward(params, frames, CFG, masks)
+        out_b = snn_forward_batch(params, frames[None], CFG, masks)
+        out_sp = snn_forward_sparse(sparsify_params(params, masks), frames, CFG)
+    assert sum(issubclass(w.category, DeprecationWarning) for w in caught) >= 3
+    np.testing.assert_allclose(np.asarray(out_fwd), np.asarray(ref), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_b[0]), np.asarray(ref), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_sp), np.asarray(ref), atol=1e-5)

@@ -1,7 +1,7 @@
 """GOAP correctness + the paper's Table I exact counts."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core.cost_model import (
     bits_fetched,

@@ -1,7 +1,7 @@
 """Unit + property tests for the compressed formats and static schedules."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core.sparse_format import (
     ITER_COMPUTE,

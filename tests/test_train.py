@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core.encoder import sigma_delta_decode, sigma_delta_encode
 from repro.models.snn import SNNConfig, init_snn
