@@ -22,6 +22,7 @@ def _modules(quick: bool):
         accuracy_sweep,
         kernel_bench,
         roofline,
+        serve_bench,
         table1_goap_vs_sw,
         table2_coo_overhead,
         table3_accum_ratio,
@@ -31,7 +32,8 @@ def _modules(quick: bool):
     mods = [table1_goap_vs_sw, table2_coo_overhead, table3_accum_ratio,
             table45_perf_model, kernel_bench, roofline]
     if not quick:
-        mods.append(accuracy_sweep)
+        # several CPU-minutes each: training sweep + full 4096-frame serve run
+        mods.extend([accuracy_sweep, serve_bench])
     return mods
 
 

@@ -1,0 +1,136 @@
+"""Serving-tier benchmark: async micro-batched engine vs per-chunk loop.
+
+Drives both engines over the same pile of synthetic I/Q frames (paper
+config, 50% density) and records a throughput/latency trajectory point to
+``BENCH_serve.json``:
+
+* **baseline** — the pre-tier synchronous loop (``AMCServeEngine``: fixed
+  32-frame chunks, host-side numpy Σ-Δ encode, pinned ``goap`` backend);
+* **async tier** — ``AsyncAMCServeEngine``: request queue -> dynamic
+  micro-batcher (fixed bucket shapes) -> worker loop running the
+  autotuned backend with encoding fused into the compiled step.
+
+Both report p50/p95/p99 request latency.  The acceptance bar for the tier
+is ``speedup >= 1.5x`` on 4096 frames; on CPU hosts the autotuner's
+dense-over-goap pick plus fused encoding clears it with a wide margin.
+
+Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--out p]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+import jax
+
+from repro.api import compile_snn, init_snn
+from repro.configs.saocds_amc import CONFIG as CFG
+from repro.serve import AMCServeEngine, AsyncAMCServeEngine
+from repro.train.pruning import make_mask_pytree
+
+NAME = "serve_bench"
+
+DENSITY = 0.5
+BASE_BATCH = 32          # the pre-tier engine's fixed chunk size
+ASYNC_MAX_BATCH = 128
+ASYNC_MAX_DELAY_MS = 2.0
+
+
+def _synthetic_frames(n: int) -> np.ndarray:
+    """(N, 2, 128) unit-power gaussian I/Q — shape/throughput stand-in."""
+    rng = np.random.default_rng(0)
+    iq = rng.normal(size=(n, 2, CFG.input_width)).astype(np.float32)
+    return iq / np.sqrt(np.mean(iq**2, axis=(-2, -1), keepdims=True))
+
+
+def run(n_frames: int = 4096, workers: int = 1) -> dict:
+    params = init_snn(jax.random.PRNGKey(0), CFG)
+    masks = make_mask_pytree(params, DENSITY)
+    iq = _synthetic_frames(n_frames)
+
+    # -- baseline: the per-chunk synchronous loop ---------------------------
+    base = AMCServeEngine(params, CFG, masks=masks, batch_size=BASE_BATCH,
+                          count_activity=False, backend="goap")
+    base.classify(iq[:BASE_BATCH])           # compile outside the clock
+    base.stats = type(base.stats)(backend=base.backend)
+    base.classify(iq)
+    base_stats = base.stats
+
+    # -- async tier ---------------------------------------------------------
+    t0 = time.perf_counter()
+    engine = AsyncAMCServeEngine(
+        params, CFG, masks=masks, backend="auto",
+        max_batch=ASYNC_MAX_BATCH, max_delay_ms=ASYNC_MAX_DELAY_MS,
+        workers=workers, count_activity=False)
+    bind_s = time.perf_counter() - t0        # autotune + per-bucket warmup
+    engine.classify(iq)
+    async_stats = engine.stats
+    engine.close()
+
+    speedup = (async_stats.throughput_fps() / base_stats.throughput_fps()
+               if base_stats.throughput_fps() else float("inf"))
+    return {
+        "n_frames": n_frames,
+        "density": DENSITY,
+        "jax_backend": jax.default_backend(),
+        "n_devices": jax.local_device_count(),
+        "baseline": {"engine": "sync-per-chunk", "batch_size": BASE_BATCH,
+                     **base_stats.summary()},
+        "async": {"engine": "async-micro-batched",
+                  "max_batch": ASYNC_MAX_BATCH,
+                  "max_delay_ms": ASYNC_MAX_DELAY_MS,
+                  "workers": workers,
+                  "bind_s": bind_s,
+                  "autotune": engine.autotune.summary(),
+                  **async_stats.summary()},
+        "speedup": speedup,
+    }
+
+
+def format_table(res: dict) -> str:
+    lines = [f"Serve bench: {res['n_frames']} frames, density "
+             f"{res['density']}, {res['n_devices']} {res['jax_backend']} "
+             f"device(s)"]
+    for key in ("baseline", "async"):
+        r = res[key]
+        lines.append(
+            f"  {r['engine']:20s} backend={r['backend']:6s} "
+            f"{r['throughput_fps']:8.1f} frames/s  "
+            f"p50 {r['p50_ms']:7.1f}ms  p95 {r['p95_ms']:7.1f}ms  "
+            f"p99 {r['p99_ms']:7.1f}ms  batches {r['batches']}")
+    lines.append(f"  speedup (async/baseline): {res['speedup']:.2f}x "
+                 f"(acceptance bar 1.5x)")
+    tuned = res["async"]["autotune"]
+    raced = ", ".join(f"{k} {v:.1f}ms" for k, v in tuned["timings_ms"].items())
+    lines.append(f"  autotune raced [{raced}] -> {tuned['choice']}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced frame count for CI smoke runs")
+    ap.add_argument("--frames", type=int, default=None)
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    n = args.frames if args.frames else (256 if args.smoke else 4096)
+    res = run(n_frames=n, workers=args.workers)
+    print(format_table(res))
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(res, indent=1, default=str))
+    print(f"wrote {out}")
+    if not args.smoke and res["speedup"] < 1.5:
+        print("FAIL: async tier below the 1.5x acceptance bar")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,9 +1,12 @@
-"""Serving example: streaming AMC classification (the paper's deployment).
+"""Serving example: async streaming AMC classification (the paper's
+deployment, production-tier edition).
 
-Trains briefly so predictions are meaningful, prunes to 50%, then runs the
-batched streaming engine over a pile of I/Q requests — reporting
-throughput, accuracy, and the activity counters that drive the power model
-(accumulations + fetched bits, paper §V).
+Trains briefly so predictions are meaningful, prunes to 50%, then serves a
+pile of I/Q requests through the async tier — request queue, dynamic
+micro-batching (tail padded to fixed bucket shapes), warmup-race backend
+autotuning, and Σ-Δ encoding fused into the compiled step — reporting
+throughput, latency percentiles, accuracy, and the activity counters that
+drive the power model (accumulations + fetched bits, paper §V).
 
 Run:  PYTHONPATH=src python examples/amc_serve.py [--requests 64]
 """
@@ -14,7 +17,7 @@ import numpy as np
 from repro.configs.saocds_amc import CONFIG as SNN_CONFIG
 from repro.core.cost_model import PAPER_TABLE5, PowerModel
 from repro.data.radioml import MODULATIONS, generate_batch
-from repro.serve.engine import AMCServeEngine
+from repro.serve import AsyncAMCServeEngine
 from repro.train.trainer import SNNTrainer, TrainerConfig
 
 
@@ -23,6 +26,10 @@ def main():
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--train-steps", type=int, default=120)
     ap.add_argument("--density", type=float, default=0.5)
+    ap.add_argument("--backend", default="auto",
+                    help="'auto' races the candidate backends at bind time")
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--max-delay-ms", type=float, default=5.0)
     args = ap.parse_args()
 
     print(f"pre-training {args.train_steps} steps at density {args.density}")
@@ -31,15 +38,27 @@ def main():
         final_density=args.density, snr_db=10.0))
     trainer.run()
 
-    engine = AMCServeEngine(trainer.params, SNN_CONFIG, masks=trainer.masks,
-                            batch_size=16, count_activity=True)
-    iq, labels, _ = generate_batch(seed=4242, batch=args.requests, snr_db=10.0)
-    preds = engine.classify(iq)
-    st = engine.stats
+    with AsyncAMCServeEngine(
+            trainer.params, SNN_CONFIG, masks=trainer.masks,
+            backend=args.backend, max_batch=args.max_batch,
+            max_delay_ms=args.max_delay_ms, count_activity=True) as engine:
+        if engine.autotune is not None:
+            timings = ", ".join(f"{k} {v:.1f}ms"
+                                for k, v in engine.autotune.timings_ms.items())
+            print(f"autotune raced [{timings}] -> pinned '{engine.backend}'")
+        iq, labels, _ = generate_batch(seed=4242, batch=args.requests,
+                                       snr_db=10.0)
+        preds = engine.classify(iq)
+        st = engine.stats
+
     acc = float((preds == labels).mean())
-    print(f"served {st.requests} requests in {st.batches} batches: "
-          f"{st.throughput_samples_per_s() / 1e3:.1f} kS/s (CPU), "
-          f"accuracy {acc:.3f}")
+    print(f"served {st.requests} requests in {st.batches} micro-batches "
+          f"({st.backend_batch_counts()}): "
+          f"{st.throughput_samples_per_s() / 1e3:.1f} kS/s "
+          f"({st.throughput_fps():.0f} frames/s, CPU), accuracy {acc:.3f}")
+    print(f"latency p50 {st.p50_ms:.1f} ms / p95 {st.p95_ms:.1f} ms / "
+          f"p99 {st.p99_ms:.1f} ms; mean queue depth "
+          f"{st.mean_queue_depth():.1f}; {st.padded_frames} padded frames")
     print("sample predictions:",
           [MODULATIONS[p] for p in preds[:6]], "...")
     print(f"activity: {st.accumulations} accumulations, "

@@ -20,10 +20,12 @@ from typing import Iterator, Optional, Tuple
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from .radioml import RadioMLDataset
 
-__all__ = ["sigma_delta_encode_np", "SpikeBatchPipeline", "lm_token_batches"]
+__all__ = ["sigma_delta_encode_np", "sigma_delta_encode_batch",
+           "SpikeBatchPipeline", "lm_token_batches"]
 
 
 def sigma_delta_encode_np(iq: np.ndarray, osr: int) -> np.ndarray:
@@ -42,6 +44,20 @@ def sigma_delta_encode_np(iq: np.ndarray, osr: int) -> np.ndarray:
         bits[t] = y_prev
     # (T, B, 2, L) -> (B, T, 2, L)
     return np.moveaxis(bits, 0, 1)
+
+
+def sigma_delta_encode_batch(iq: jax.Array, osr: int) -> jax.Array:
+    """Traceable batched sigma-delta encoder: (B, 2, L) -> (B, T, 2, L).
+
+    Pure-jax counterpart of :func:`sigma_delta_encode_np` (identical
+    numerics, asserted in tests).  Because it traces, the serving engine
+    composes it with the bound forward pass under one ``jax.jit`` so
+    encoding rides inside the compiled step instead of stalling the host —
+    the software analogue of the paper's fully-pipelined Σ-Δ input stage.
+    """
+    from repro.core.encoder import encode_frames
+
+    return jnp.moveaxis(encode_frames(iq, osr), 0, 1)
 
 
 class SpikeBatchPipeline:

@@ -49,6 +49,9 @@ __all__ = [
     "logits_pspec",
     "decode_state_specs",
     "spec_report",
+    "serve_mesh",
+    "serve_batch_pspec",
+    "shard_serve_fn",
 ]
 
 
@@ -309,6 +312,40 @@ def decode_state_specs(state_tree: Any, mesh: Mesh, batch: int) -> Any:
         return P(*dims)
 
     return jax.tree_util.tree_map_with_path(visit, state_tree)
+
+
+def serve_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D ``("data",)`` mesh over local devices for the serving tier.
+
+    Serving is pure data parallelism: the SNN is tiny (fits any single
+    device many times over) so the only axis worth sharding is the request
+    batch.  A 1-device mesh is valid and keeps the shard_map code path
+    identical from laptop to pod.
+    """
+    from repro.compat import AxisType, make_mesh
+
+    n = n_devices if n_devices is not None else jax.local_device_count()
+    return make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+
+
+def serve_batch_pspec(mesh: Mesh) -> P:
+    """Leading-axis batch spec for serve batches on a ``serve_mesh``."""
+    return P("data" if "data" in mesh.axis_names else None)
+
+
+def shard_serve_fn(fn, mesh: Mesh):
+    """shard_map-wrap a batched ``(B, ...) -> (B, ...)`` fn over ``data``.
+
+    The per-shard body is embarrassingly parallel (no collectives): each
+    device runs the bound program on its slice of the request batch.  The
+    micro-batcher guarantees every bucket size is a multiple of the data
+    axis, so the split is always even.  Callers still jit the result.
+    """
+    from repro.compat import shard_map
+
+    spec = serve_batch_pspec(mesh)
+    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec,
+                     check_vma=False)
 
 
 def spec_report(spec_tree: Any, shape_tree: Any) -> str:

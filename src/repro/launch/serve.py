@@ -1,9 +1,12 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id>``.
 
 * ``--arch saocds-amc`` — the paper's deployment mode: a stream of I/Q
-  frames is Σ-Δ encoded and classified by the sparse (GOAP) SNN forward
-  with batched requests (``repro.serve.engine.AMCServeEngine``), reporting
-  throughput and the activity counters that feed the power model.
+  frames is Σ-Δ encoded and classified through the async serving tier
+  (``repro.serve.AsyncAMCServeEngine``: request queue -> dynamic
+  micro-batcher -> autotuned backend, sharded across local devices),
+  reporting throughput, latency percentiles, and the activity counters
+  that feed the power model.  ``--engine sync`` runs the legacy per-chunk
+  loop instead.
 * ``--arch <assigned-lm-id>`` — batched greedy generation on the reduced
   config: one prefill (cache-building) + N decode steps against the
   sharded-layout decode state, reporting tokens/s.
@@ -61,25 +64,53 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--density", type=float, default=0.5)
+    ap.add_argument("--engine", choices=["async", "sync"], default="async",
+                    help="saocds-amc: async micro-batched tier or the "
+                         "legacy per-chunk loop")
+    ap.add_argument("--backend", default="auto",
+                    help="saocds-amc: execution backend, or 'auto' to race "
+                         "the candidates at bind time (async engine only)")
+    ap.add_argument("--max-delay-ms", type=float, default=5.0)
+    ap.add_argument("--workers", type=int, default=1)
     args = ap.parse_args(argv)
 
     if args.arch == "saocds-amc":
         from repro.configs.saocds_amc import CONFIG as SNN_CONFIG
         from repro.data.radioml import generate_batch
         from repro.models.snn import init_snn
-        from repro.serve.engine import AMCServeEngine
+        from repro.serve import AMCServeEngine, AsyncAMCServeEngine
         from repro.train.pruning import make_mask_pytree
 
         params = init_snn(jax.random.PRNGKey(0), SNN_CONFIG)
         masks = make_mask_pytree(params, args.density)
-        engine = AMCServeEngine(params, SNN_CONFIG, masks=masks,
-                                batch_size=args.batch, count_activity=True)
         iq, labels, _ = generate_batch(0, args.requests, snr_db=10.0)
-        preds = engine.classify(iq)
+        if args.engine == "sync":
+            backend = "goap" if args.backend == "auto" else args.backend
+            engine = AMCServeEngine(params, SNN_CONFIG, masks=masks,
+                                    batch_size=args.batch,
+                                    count_activity=True, backend=backend)
+            preds = engine.classify(iq)
+        else:
+            engine = AsyncAMCServeEngine(
+                params, SNN_CONFIG, masks=masks, backend=args.backend,
+                max_batch=args.batch, max_delay_ms=args.max_delay_ms,
+                workers=args.workers, count_activity=True)
+            if engine.autotune is not None:
+                t = ", ".join(f"{k}={v:.1f}ms"
+                              for k, v in engine.autotune.timings_ms.items())
+                print(f"autotune[{t}] -> {engine.backend}")
+            preds = engine.classify(iq)
+            engine.close()
         st = engine.stats
         print(f"requests={st.requests} batches={st.batches} "
+              f"backend={st.backend} "
               f"throughput={st.throughput_samples_per_s() / 1e3:.1f} kS/s "
-              f"accum={st.accumulations} fetched_bits={st.fetched_bits}")
+              f"({st.throughput_fps():.0f} frames/s)")
+        print(f"latency p50={st.p50_ms:.1f}ms p95={st.p95_ms:.1f}ms "
+              f"p99={st.p99_ms:.1f}ms  mean queue depth "
+              f"{st.mean_queue_depth():.1f}  padded {st.padded_frames}")
+        print(f"activity: accum={st.accumulations} "
+              f"fetched_bits={st.fetched_bits}")
         print(f"(untrained net) agreement with labels: "
               f"{float((preds == labels).mean()):.3f}")
         return 0

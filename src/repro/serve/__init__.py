@@ -1,3 +1,18 @@
-"""Serving: batched streaming AMC inference engine."""
+"""Serving tier: micro-batched streaming AMC inference engines."""
 
-from .engine import AMCServeEngine, ServeStats
+from .autotune import AutotuneReport, autotune_backend, default_candidates
+from .batcher import MicroBatch, MicroBatcher, Request, ServeFuture
+from .engine import AMCServeEngine, AsyncAMCServeEngine, ServeStats
+
+__all__ = [
+    "AMCServeEngine",
+    "AsyncAMCServeEngine",
+    "ServeStats",
+    "MicroBatcher",
+    "MicroBatch",
+    "Request",
+    "ServeFuture",
+    "AutotuneReport",
+    "autotune_backend",
+    "default_candidates",
+]

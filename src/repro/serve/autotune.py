@@ -1,0 +1,108 @@
+"""Warmup-race backend autotuner for the serving tier.
+
+The layer-graph API makes every execution dataflow interchangeable
+(``dense`` / ``goap`` / ``pallas`` / ``stream`` produce identical logits),
+but their *cost* is wildly platform-dependent: the COO gather dataflow that
+wins on the paper's accelerator loses to the im2col matmul oracle on a
+wide-SIMD CPU, and the Pallas block-sparse kernel only pays off on a real
+TPU (CPU interpret mode executes the kernel body in Python).
+
+So the engine does what the hardware cannot: at bind time it **races** the
+candidate backends on the exact batch shape it is about to serve — compile,
+warm up, time a few repetitions — and pins the winner for the lifetime of
+the binding.  A candidate that raises (missing TPU, unsupported layout,
+bind-under-trace error) is recorded and excluded; if every candidate fails
+the tuner falls back to ``goap``, the paper's reference dataflow, which
+binds from plain numpy artifacts on any host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AutotuneReport", "default_candidates", "autotune_backend"]
+
+# Interpret-mode Pallas is orders of magnitude off the pace and only slows
+# the race down; only let it compete where a real TPU will run it.
+_CPU_CANDIDATES = ("dense", "goap")
+_TPU_CANDIDATES = ("dense", "goap", "pallas")
+
+
+def default_candidates() -> Tuple[str, ...]:
+    """Backends worth racing on this host."""
+    return _TPU_CANDIDATES if jax.default_backend() == "tpu" else _CPU_CANDIDATES
+
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneReport:
+    """Outcome of one warmup race (kept on the engine for introspection)."""
+
+    choice: str
+    timings_ms: Dict[str, float]      # successful candidates -> mean wall ms
+    errors: Dict[str, str]            # failed candidates -> error summary
+    batch_shape: Tuple[int, ...]
+    fell_back: bool = False           # True when every candidate raised
+
+    def summary(self) -> dict:
+        return {
+            "choice": self.choice,
+            "timings_ms": dict(self.timings_ms),
+            "errors": dict(self.errors),
+            "batch_shape": list(self.batch_shape),
+            "fell_back": self.fell_back,
+        }
+
+
+def autotune_backend(
+    program,
+    params,
+    batch_shape: Sequence[int],
+    *,
+    masks=None,
+    candidates: Optional[Sequence[str]] = None,
+    reps: int = 2,
+    budget_s: float = 5.0,
+    fallback: str = "goap",
+    make_fn: Optional[Callable] = None,
+) -> AutotuneReport:
+    """Race ``candidates`` on ``batch_shape`` and pin the fastest.
+
+    ``make_fn(bound)`` builds the callable to time from a
+    :class:`~repro.models.graph.BoundProgram` — the engine passes its full
+    fused step (encode + forward + shard_map) so the race measures what
+    will actually serve; default is the jitted ``bound.batch``.
+
+    Candidates are always scored on post-warmup (steady-state) runs so a
+    slow-to-compile but fast-to-run backend is never penalized for its
+    compile time; a candidate whose warmup already exceeded ``budget_s``
+    gets a single timed rep instead of ``reps`` (bounds how long a
+    genuinely slow candidate can stall engine start-up).
+    """
+    candidates = tuple(candidates) if candidates is not None else default_candidates()
+    timings: Dict[str, float] = {}
+    errors: Dict[str, str] = {}
+    probe = jnp.zeros(tuple(batch_shape), jnp.float32)
+    for name in candidates:
+        try:
+            bound = program.bind(params, name, masks=masks)
+            fn = jax.jit(bound.batch) if make_fn is None else make_fn(bound)
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(probe))       # compile + warm up
+            warm = time.perf_counter() - t0
+            n_reps = 1 if warm > budget_s else max(1, reps)
+            t0 = time.perf_counter()
+            for _ in range(n_reps):
+                jax.block_until_ready(fn(probe))
+            timings[name] = (time.perf_counter() - t0) / n_reps * 1e3
+        except Exception as e:  # noqa: BLE001 — any failure disqualifies
+            errors[name] = f"{type(e).__name__}: {e}"
+    if timings:
+        choice, fell_back = min(timings, key=timings.get), False
+    else:
+        choice, fell_back = fallback, True
+    return AutotuneReport(choice=choice, timings_ms=timings, errors=errors,
+                          batch_shape=tuple(batch_shape), fell_back=fell_back)

@@ -1,0 +1,229 @@
+"""Dynamic micro-batching request queue for the serving tier.
+
+The accelerator sustains 23.5 MS/s because its pipeline never sees a
+control bubble: every frame enters a fixed iteration schedule.  The
+software analogue is a micro-batcher that gathers individual requests into
+**fixed-shape** batches: batch sizes are drawn from a static bucket ladder
+(powers of two up to ``max_batch``) and the tail of a partially-filled
+bucket is zero-padded, so the jitted program only ever sees ``len(buckets)``
+distinct shapes and never re-specializes under load.
+
+Flush policy (the standard dynamic-batching trade-off):
+
+* **size flush** — the batch reaches ``max_batch`` requests: ship now,
+  throughput-optimal;
+* **timeout flush** — ``max_delay`` elapsed since the batch started
+  forming: ship what we have (padded up to the smallest covering bucket),
+  bounding added tail latency to ``max_delay`` under light traffic.
+
+``MicroBatcher`` is transport-only — it knows nothing about models or
+backends; the engine's worker loops consume :class:`MicroBatch` objects
+and resolve each request's :class:`ServeFuture`.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "ServeFuture",
+    "Request",
+    "MicroBatch",
+    "make_buckets",
+    "bucket_for",
+    "MicroBatcher",
+]
+
+
+class ServeFuture(concurrent.futures.Future):
+    """Future for one serve request (stdlib ``Future`` semantics).
+
+    Resolved by the engine's worker loop — ``result(timeout=...)`` blocks
+    until the micro-batch containing this request has been served, or
+    raises the worker's exception / a shutdown ``RuntimeError``.
+    """
+
+
+@dataclasses.dataclass
+class Request:
+    """One enqueued classification request (a single I/Q frame)."""
+
+    seq: int
+    iq: np.ndarray            # (IC, L) float32
+    t_enqueue: float
+    future: ServeFuture
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    """A flushed batch: real requests plus zero-padded tail rows."""
+
+    requests: List[Request]
+    bucket: int               # fixed batch shape this batch was padded to
+    frames: np.ndarray        # (bucket, IC, L) — rows >= n_real are padding
+    queue_depth: int          # backlog remaining in the queue at flush time
+
+    @property
+    def n_real(self) -> int:
+        return len(self.requests)
+
+    @property
+    def n_padded(self) -> int:
+        return self.bucket - len(self.requests)
+
+
+def make_buckets(max_batch: int, align: int = 1) -> Tuple[int, ...]:
+    """Power-of-two bucket ladder up to ``max_batch``, ``align``-aligned.
+
+    ``align`` is the device count of the serving mesh: every bucket must be
+    divisible by it so the batch axis shards evenly.  A ``max_batch`` that
+    is not itself aligned is rounded **down** (never above the caller's
+    sizing cap), but never below ``align``.
+    """
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    if align < 1:
+        raise ValueError(f"align must be >= 1, got {align}")
+    top = max(align, (max_batch // align) * align)
+    sizes = []
+    b = align
+    while b < top:
+        sizes.append(b)
+        b *= 2
+    sizes.append(top)
+    return tuple(sorted(set(sizes)))
+
+
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket covering ``n`` requests (caller caps n at max)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class MicroBatcher:
+    """Bounded-delay dynamic micro-batcher over a thread-safe queue."""
+
+    _CLOSE = object()  # sentinel waking (and re-waking) worker loops
+
+    def __init__(
+        self,
+        frame_shape: Tuple[int, int],
+        max_batch: Optional[int] = None,
+        max_delay_ms: float = 5.0,
+        buckets: Optional[Sequence[int]] = None,
+        align: int = 1,
+        clock=time.perf_counter,
+    ):
+        self.frame_shape = tuple(frame_shape)
+        if buckets:
+            self.buckets = tuple(sorted(buckets))
+            if max_batch is not None and max_batch != self.buckets[-1]:
+                raise ValueError(
+                    f"max_batch={max_batch} conflicts with explicit buckets "
+                    f"{self.buckets} (their top is the max batch — pass one "
+                    "or the other, or make them agree)")
+        else:
+            self.buckets = make_buckets(64 if max_batch is None else max_batch,
+                                        align)
+        if any(b % align for b in self.buckets):
+            raise ValueError(
+                f"buckets {self.buckets} must all be multiples of align={align}")
+        self.max_batch = self.buckets[-1]
+        self.max_delay_s = max_delay_ms / 1e3
+        self._clock = clock
+        self._q: "queue.Queue" = queue.Queue()
+        self._seq = itertools.count()
+        self._closed = False
+        # serializes submit vs close/drain: a submit either lands before
+        # the close sentinel (and is served or drained) or raises — no
+        # request can slip into the queue after drain() has emptied it
+        self._state_lock = threading.Lock()
+
+    # -- producer side ------------------------------------------------------
+
+    def submit(self, iq: np.ndarray) -> ServeFuture:
+        """Enqueue one (IC, L) frame; returns a future for its prediction."""
+        iq = np.asarray(iq, dtype=np.float32)
+        if iq.shape != self.frame_shape:
+            raise ValueError(
+                f"expected frame of shape {self.frame_shape}, got {iq.shape}")
+        with self._state_lock:
+            if self._closed:
+                raise RuntimeError("MicroBatcher is closed")
+            fut = ServeFuture()
+            self._q.put(Request(seq=next(self._seq), iq=iq,
+                                t_enqueue=self._clock(), future=fut))
+        return fut
+
+    def qsize(self) -> int:
+        return self._q.qsize()
+
+    def close(self) -> None:
+        """Wake all worker loops; pending get_batch calls return None."""
+        with self._state_lock:
+            self._closed = True
+            self._q.put(self._CLOSE)
+
+    def drain(self) -> List[Request]:
+        """Remove and return every still-queued request (after close).
+
+        The engine resolves their futures with an error so no caller is
+        left blocking on a request that will never be served.
+        """
+        with self._state_lock:
+            if not self._closed:
+                raise RuntimeError("drain() is only valid after close()")
+            pending: List[Request] = []
+            while True:
+                try:
+                    item = self._q.get_nowait()
+                except queue.Empty:
+                    return pending
+                if item is not self._CLOSE:
+                    pending.append(item)
+
+    # -- consumer side ------------------------------------------------------
+
+    def get_batch(self, timeout: Optional[float] = None) -> Optional[MicroBatch]:
+        """Block for the next batch; None on timeout or close.
+
+        Waits for a first request, then keeps draining the queue until the
+        batch is full (**size flush**) or ``max_delay`` has elapsed since
+        the batch started forming (**timeout flush**).
+        """
+        try:
+            first = self._q.get(timeout=timeout)
+        except queue.Empty:
+            return None
+        if first is self._CLOSE:
+            self._q.put(self._CLOSE)  # re-wake sibling workers
+            return None
+        reqs = [first]
+        deadline = self._clock() + self.max_delay_s
+        while len(reqs) < self.max_batch:
+            remaining = deadline - self._clock()
+            if remaining <= 0:
+                break
+            try:
+                nxt = self._q.get(timeout=remaining)
+            except queue.Empty:
+                break
+            if nxt is self._CLOSE:
+                self._q.put(self._CLOSE)
+                break
+            reqs.append(nxt)
+        bucket = bucket_for(len(reqs), self.buckets)
+        frames = np.zeros((bucket,) + self.frame_shape, dtype=np.float32)
+        for i, r in enumerate(reqs):
+            frames[i] = r.iq
+        return MicroBatch(requests=reqs, bucket=bucket, frames=frames,
+                          queue_depth=self._q.qsize())

@@ -1,23 +1,33 @@
-"""Batched streaming AMC inference engine.
+"""Streaming AMC inference engines (sync baseline + async serving tier).
 
 Mirrors the accelerator's deployment mode: a continuous stream of I/Q
 frames is sigma-delta encoded and classified through the unified
-``SNNProgram`` layer graph.  The execution backend is selectable
-(``goap`` by default — the paper's sparsity-aware dataflow; ``dense`` /
-``pallas`` / ``stream`` plug in unchanged).  Requests are gathered into
-fixed-size batches (padding the tail) — the static-batch discipline is the
-software analogue of the paper's fixed iteration schedule: the jitted
-program never re-specializes, so the pipeline stays warm.
+``SNNProgram`` layer graph.  Two engines share one stats/counting core:
 
-The engine reports the cost-model counters (accumulations, fetched bits)
-for every processed batch, which is what the power model consumes, and
-records which backend served each batch.
+* :class:`AMCServeEngine` — the original synchronous per-chunk loop
+  (fixed-size batches, numpy encode on the host).  Kept as the serving
+  baseline and for callers that want a blocking, single-threaded path.
+* :class:`AsyncAMCServeEngine` — the production-style tier: a request
+  queue feeds a dynamic micro-batcher (size/timeout flush, tail padded to
+  fixed bucket shapes so the jitted program never re-specializes — the
+  software form of the paper's fixed iteration schedule); worker loops fan
+  batches across devices via ``shard_map`` over a 1-D data mesh; the
+  Σ-Δ encoder is traced into the compiled step; and a warmup-race
+  autotuner picks the fastest backend for the serving batch shape at bind
+  time (``backend="auto"``).
+
+Both engines report the cost-model counters (accumulations, fetched bits)
+that the power model consumes, which backend served each batch, and —
+new in the async tier era — per-request latency percentiles, sampled
+queue depths, and padded-frame counts.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import Counter
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -25,17 +35,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cost_model import bits_fetched, fc_wm_counts, goap_conv_counts
-from repro.core.saocds import pad_same
+from repro.core.saocds import max_pool_spikes, pad_same, saocds_conv_layer
 from repro.core.sparse_format import weight_mask_from_dense
-from repro.data.pipeline import sigma_delta_encode_np
+from repro.data.pipeline import sigma_delta_encode_batch, sigma_delta_encode_np
 from repro.models.graph import compile_snn
 from repro.models.snn import SNNConfig, sparsify_params
+from repro.serve.autotune import AutotuneReport, autotune_backend
+from repro.serve.batcher import MicroBatcher
 
-__all__ = ["AMCServeEngine", "ServeStats"]
+__all__ = ["AMCServeEngine", "AsyncAMCServeEngine", "ServeStats"]
 
 
 @dataclasses.dataclass
 class ServeStats:
+    # Sample histories are bounded: a long-lived tier must not leak memory,
+    # so percentiles/means are over the most recent MAX_SAMPLES entries.
+    MAX_SAMPLES = 65536
+
     requests: int = 0
     batches: int = 0
     accumulations: int = 0
@@ -43,14 +59,129 @@ class ServeStats:
     wall_s: float = 0.0
     backend: str = ""
     batch_backends: List[str] = dataclasses.field(default_factory=list)
+    backend_batch_totals: Dict[str, int] = dataclasses.field(default_factory=dict)
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    queue_depths: List[int] = dataclasses.field(default_factory=list)
+    padded_frames: int = 0
+
+    def record_batch(self, backend: str, queue_depth: Optional[int] = None,
+                     padded: int = 0) -> None:
+        """Account one served batch (exact totals + bounded history)."""
+        self.batches += 1
+        self.padded_frames += padded
+        self.backend_batch_totals[backend] = (
+            self.backend_batch_totals.get(backend, 0) + 1)
+        self.batch_backends.append(backend)
+        if len(self.batch_backends) > self.MAX_SAMPLES:
+            del self.batch_backends[: -self.MAX_SAMPLES]
+        if queue_depth is not None:
+            self.queue_depths.append(queue_depth)
+            if len(self.queue_depths) > self.MAX_SAMPLES:
+                del self.queue_depths[: -self.MAX_SAMPLES]
+
+    def record_latencies(self, values) -> None:
+        """Append per-request latencies, keeping the window bounded."""
+        self.latencies_s.extend(values)
+        if len(self.latencies_s) > self.MAX_SAMPLES:
+            del self.latencies_s[: -self.MAX_SAMPLES]
 
     def throughput_samples_per_s(self, frame_len: int = 128) -> float:
         if self.wall_s == 0:
             return 0.0
         return self.requests * frame_len / self.wall_s
 
+    def throughput_fps(self) -> float:
+        """Requests (frames) classified per wall second."""
+        return self.requests / self.wall_s if self.wall_s else 0.0
+
+    # -- latency percentiles ------------------------------------------------
+
+    def latency_percentile(self, q: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return float(np.percentile(self.latencies_s, q))
+
+    @property
+    def p50_ms(self) -> float:
+        return self.latency_percentile(50.0) * 1e3
+
+    @property
+    def p95_ms(self) -> float:
+        return self.latency_percentile(95.0) * 1e3
+
+    @property
+    def p99_ms(self) -> float:
+        return self.latency_percentile(99.0) * 1e3
+
+    def backend_batch_counts(self) -> Dict[str, int]:
+        """Exact per-backend batch totals (survive the history trimming)."""
+        if self.backend_batch_totals:
+            return dict(self.backend_batch_totals)
+        return dict(Counter(self.batch_backends))  # directly-built stats
+
+    def mean_queue_depth(self) -> float:
+        return float(np.mean(self.queue_depths)) if self.queue_depths else 0.0
+
+    def summary(self) -> dict:
+        """JSON-ready digest (what BENCH_serve.json records)."""
+        return {
+            "requests": self.requests,
+            "batches": self.batches,
+            "backend": self.backend,
+            "backend_batch_counts": self.backend_batch_counts(),
+            "throughput_fps": self.throughput_fps(),
+            "throughput_samples_per_s": self.throughput_samples_per_s(),
+            "p50_ms": self.p50_ms,
+            "p95_ms": self.p95_ms,
+            "p99_ms": self.p99_ms,
+            "mean_queue_depth": self.mean_queue_depth(),
+            "padded_frames": self.padded_frames,
+            "accumulations": self.accumulations,
+            "fetched_bits": self.fetched_bits,
+            "wall_s": self.wall_s,
+        }
+
+
+def _fail_future(fut, err: BaseException) -> None:
+    """set_exception tolerant of callers that cancelled or already-done."""
+    if fut.done():
+        return
+    try:
+        fut.set_exception(err)
+    except Exception:  # noqa: BLE001 — lost a cancel race; nothing to do
+        pass
+
+
+def count_batch_activity(stats: ServeStats, sparse, frames: np.ndarray,
+                         cfg: SNNConfig) -> None:
+    """Exact event counts through the conv stack (cost-model hooks).
+
+    ``frames``: (B, T, IC, L) encoded spikes, **real rows only** — padded
+    tail rows must be stripped by the caller so padding never leaks into
+    the activity stats.
+    """
+    # the WM layout depends only on the fixed weights — build it once per
+    # batch, not once per frame (counting the dominant FC is enough)
+    wm = weight_mask_from_dense(np.asarray(sparse["fc"][0]["w"]))
+    for b in range(frames.shape[0]):
+        x = frames[b]  # (T, IC, L)
+        for layer in sparse["conv"]:
+            coo = layer["coo"]
+            padded = np.asarray(pad_same(jnp.asarray(x), coo.kw))
+            c = goap_conv_counts(padded, coo)
+            stats.accumulations += c.accumulations
+            stats.fetched_bits += bits_fetched(c)
+            # advance the stream (cheap dense emulation for counting)
+            out, _ = saocds_conv_layer(jnp.asarray(padded), coo, layer["lif"])
+            x = np.asarray(max_pool_spikes(out, cfg.pool))
+        c = fc_wm_counts(x.reshape(x.shape[0], -1), wm)
+        stats.accumulations += c.accumulations
+        stats.fetched_bits += bits_fetched(c)
+
 
 class AMCServeEngine:
+    """Synchronous per-chunk serving loop (the pre-tier baseline)."""
+
     def __init__(
         self,
         params,
@@ -65,7 +196,7 @@ class AMCServeEngine:
         self.count_activity = count_activity
         self.backend = backend
         self.program = compile_snn(cfg)
-        # COO form only feeds the _count() activity hooks
+        # COO form only feeds the activity-counting hooks
         self.sparse = sparsify_params(params, masks) if count_activity else None
         self.stats = ServeStats(backend=backend)
         bound = self.program.bind(params, backend, masks=masks)
@@ -83,35 +214,220 @@ class AMCServeEngine:
                 chunk = np.concatenate([chunk, np.zeros((pad,) + chunk.shape[1:], chunk.dtype)])
             frames = sigma_delta_encode_np(chunk, self.cfg.timesteps)
             logits = np.asarray(self._fwd(jnp.asarray(frames)))
-            preds[s : s + self.batch_size - pad] = logits[: self.batch_size - pad].argmax(-1)
-            self.stats.batches += 1
-            self.stats.batch_backends.append(self.backend)
+            n_real = self.batch_size - pad
+            preds[s : s + n_real] = logits[:n_real].argmax(-1)
+            self.stats.record_batch(self.backend, padded=pad)
+            # latency is arrival (classify() start) -> chunk completion,
+            # matching the async tier's enqueue->completion semantics so
+            # the two engines' percentiles are directly comparable
+            self.stats.record_latencies(
+                [time.perf_counter() - t0] * n_real)
             if self.count_activity:
-                self._count(frames[: self.batch_size - pad])
+                self._count(frames[:n_real])
         self.stats.requests += n
         self.stats.wall_s += time.perf_counter() - t0
         return preds
 
     def _count(self, frames: np.ndarray) -> None:
-        """Exact event counts through the conv stack (cost-model hooks)."""
-        for b in range(frames.shape[0]):
-            x = frames[b]  # (T, 2, L)
-            for layer in self.sparse["conv"]:
-                coo = layer["coo"]
-                padded = np.asarray(pad_same(jnp.asarray(x), coo.kw))
-                c = goap_conv_counts(padded, coo)
-                self.stats.accumulations += c.accumulations
-                self.stats.fetched_bits += bits_fetched(c)
-                # advance the stream (cheap dense emulation for counting)
-                from repro.core.saocds import max_pool_spikes, saocds_conv_layer
-                from repro.core.lif import init_lif_params
+        count_batch_activity(self.stats, self.sparse, frames, self.cfg)
 
-                out, _ = saocds_conv_layer(jnp.asarray(padded), coo, layer["lif"])
-                x = np.asarray(max_pool_spikes(out, self.cfg.pool))
-            flat = x.reshape(x.shape[0], -1)
-            for layer in self.sparse["fc"]:
-                wm = weight_mask_from_dense(np.asarray(layer["w"]))
-                c = fc_wm_counts(flat, wm)
-                self.stats.accumulations += c.accumulations
-                self.stats.fetched_bits += bits_fetched(c)
-                break  # counting the dominant FC is enough for the model
+
+class AsyncAMCServeEngine:
+    """Async sharded serving tier: queue -> micro-batcher -> worker loops.
+
+    Usage::
+
+        engine = AsyncAMCServeEngine(params, cfg, masks=masks,
+                                     backend="auto", max_batch=64)
+        fut = engine.submit(iq_frame)        # (2, L) -> future
+        pred = fut.result()                  # class id
+        preds = engine.classify(iq_frames)   # (N, 2, L) convenience wrapper
+        engine.close()
+
+    ``backend="auto"`` races the platform's candidate backends on the
+    largest bucket shape and pins the winner (``engine.autotune`` keeps the
+    full report).  With more than one local device (or an explicit
+    ``mesh``) every batch is fanned across the mesh's ``data`` axis via
+    ``shard_map``; bucket sizes are forced to multiples of the device
+    count so the split is always even.
+    """
+
+    def __init__(
+        self,
+        params,
+        cfg: SNNConfig,
+        masks=None,
+        *,
+        backend: str = "auto",
+        max_batch: Optional[int] = None,   # default 64 (or buckets[-1])
+        max_delay_ms: float = 5.0,
+        buckets: Optional[Sequence[int]] = None,
+        workers: int = 1,
+        mesh=None,
+        count_activity: bool = False,
+        warmup: bool = True,
+        candidates: Optional[Sequence[str]] = None,
+        autotune_reps: int = 2,
+    ):
+        self.cfg = cfg
+        self.count_activity = count_activity
+        self.program = compile_snn(cfg)
+        self.sparse = sparsify_params(params, masks) if count_activity else None
+
+        if mesh is None and jax.local_device_count() > 1:
+            from repro.distributed.sharding import serve_mesh
+
+            mesh = serve_mesh()
+        self.mesh = mesh
+        align = int(mesh.shape["data"]) if mesh is not None else 1
+
+        ic0 = cfg.conv_specs[0][1]
+        self.batcher = MicroBatcher(
+            frame_shape=(ic0, cfg.input_width), max_batch=max_batch,
+            max_delay_ms=max_delay_ms, buckets=buckets, align=align)
+
+        self.autotune: Optional[AutotuneReport] = None
+        raced_steps: Dict[str, object] = {}
+        if backend == "auto":
+            probe_shape = (self.batcher.max_batch, ic0, cfg.input_width)
+
+            def make_fn(bound):  # memoize so the winner's compile is reused
+                fn = self._wrap_bound(bound)
+                raced_steps[bound.backend] = fn
+                return fn
+
+            self.autotune = autotune_backend(
+                self.program, params, probe_shape, masks=masks,
+                candidates=candidates, reps=autotune_reps, make_fn=make_fn)
+            backend = self.autotune.choice
+        self.backend = backend
+        self.stats = ServeStats(backend=backend)
+        self._step = raced_steps.get(backend) or self._wrap_bound(
+            self.program.bind(params, backend, masks=masks))
+
+        if warmup:  # pre-compile every bucket shape so serving never stalls
+            for b in self.batcher.buckets:
+                jax.block_until_ready(
+                    self._step(jnp.zeros((b, ic0, cfg.input_width), jnp.float32)))
+
+        self._lock = threading.Lock()
+        self._t_first_enqueue = float("inf")  # start of the serving window
+        self._stop = threading.Event()
+        self._threads = [
+            threading.Thread(target=self._worker, daemon=True,
+                             name=f"amc-serve-worker-{i}")
+            for i in range(max(1, workers))
+        ]
+        for t in self._threads:
+            t.start()
+
+    # -- compiled step ------------------------------------------------------
+
+    def _wrap_bound(self, bound):
+        """Fuse Σ-Δ encode + bound forward (+ shard_map) under one jit."""
+        osr = self.cfg.timesteps
+
+        def step(iq):  # (B, IC, L) raw I/Q -> (B, n_classes) logits
+            return bound.batch(sigma_delta_encode_batch(iq, osr))
+
+        if self.mesh is not None:
+            from repro.distributed.sharding import shard_serve_fn
+
+            step = shard_serve_fn(step, self.mesh)
+        return jax.jit(step)
+
+    # -- worker loop --------------------------------------------------------
+
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            batch = self.batcher.get_batch(timeout=0.1)
+            if batch is None:
+                continue
+            try:
+                logits = np.asarray(self._step(jnp.asarray(batch.frames)))
+                preds = logits.argmax(-1).astype(np.int32)
+                n_real = batch.n_real
+                # activity counting is an expensive diagnostics mode; it
+                # runs outside the lock (workers stay parallel) but before
+                # the futures resolve, so a caller that reads ``stats``
+                # right after its results always sees them counted
+                counted: Optional[ServeStats] = None
+                if self.count_activity:
+                    counted = ServeStats()
+                    frames = sigma_delta_encode_np(
+                        batch.frames[:n_real], self.cfg.timesteps)
+                    count_batch_activity(counted, self.sparse, frames,
+                                         self.cfg)
+                # completion is stamped after counting: callers' futures
+                # resolve after it, so latencies reflect what they waited
+                t_done = time.perf_counter()
+                with self._lock:
+                    self.stats.requests += n_real
+                    self.stats.record_batch(self.backend,
+                                            queue_depth=batch.queue_depth,
+                                            padded=batch.n_padded)
+                    self.stats.record_latencies(
+                        t_done - r.t_enqueue for r in batch.requests)
+                    # serving window: first enqueue ever -> latest batch
+                    # completion.  Correct for both the submit()/future
+                    # path and (possibly concurrent) classify() callers.
+                    self._t_first_enqueue = min(
+                        self._t_first_enqueue,
+                        min(r.t_enqueue for r in batch.requests))
+                    # max(): a worker delayed by activity counting must not
+                    # shrink the window another worker already extended
+                    self.stats.wall_s = max(self.stats.wall_s,
+                                            t_done - self._t_first_enqueue)
+                    if counted is not None:
+                        self.stats.accumulations += counted.accumulations
+                        self.stats.fetched_bits += counted.fetched_bits
+                for i, r in enumerate(batch.requests):
+                    # transitions PENDING -> RUNNING (after which cancel()
+                    # can no longer win the race); False = caller cancelled
+                    # while queued — skip, don't poison the batch
+                    if r.future.set_running_or_notify_cancel():
+                        r.future.set_result(int(preds[i]))
+            except Exception as e:  # noqa: BLE001 — propagate to callers;
+                # the whole batch path is covered so a stats/counting error
+                # can never strand a future or kill the worker loop
+                for r in batch.requests:
+                    _fail_future(r.future, e)
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, iq: np.ndarray):
+        """Enqueue one (2, L) frame; returns a ``ServeFuture``."""
+        return self.batcher.submit(iq)
+
+    def classify(self, iq: np.ndarray, timeout: float = 300.0) -> np.ndarray:
+        """Blocking convenience wrapper: (N, 2, L) -> class ids (N,).
+
+        ``stats.wall_s`` is maintained by the worker loop as the serving
+        window (first enqueue -> latest completion), so it is consistent
+        whether requests arrive through here or through ``submit()``.
+        """
+        futures = [self.submit(iq[i]) for i in range(iq.shape[0])]
+        return np.asarray([f.result(timeout=timeout) for f in futures],
+                          dtype=np.int32)
+
+    def close(self) -> None:
+        """Stop the workers; no future is ever left unresolved.
+
+        In-flight batches finish (workers join after their current batch);
+        requests still queued are drained and their futures failed with a
+        ``RuntimeError`` so blocked callers wake instead of hanging.
+        """
+        self._stop.set()
+        self.batcher.close()
+        for t in self._threads:
+            t.join(timeout=5.0)
+        err = RuntimeError("AsyncAMCServeEngine closed before serving "
+                           "this request")
+        for r in self.batcher.drain():
+            _fail_future(r.future, err)
+
+    def __enter__(self) -> "AsyncAMCServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,152 @@
+"""Property-based differential tests across execution backends.
+
+The paper's claim — one fixed SNN, identical numerics through every
+dataflow — must hold for *any* valid model, not just the paper's shapes.
+Random ``SNNConfig``s (varying conv specs, pooling, FC widths, timesteps)
+must yield identical logits across all registered backends, and the
+compressed weight formats must round-trip losslessly.
+
+Two layers of coverage:
+
+* deterministic sweep — 25 seeded random configs that always run (the
+  acceptance floor, independent of optional deps);
+* ``hypothesis`` search — the same properties under minimized
+  counterexample shrinking, via the ``tests/_hyp.py`` shim so the suite
+  still collects (and skips cleanly) when hypothesis is absent.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hyp import given, settings, st
+
+from repro.api import SNNConfig, compile_snn, init_snn
+from repro.core.sparse_format import (
+    block_sparse_from_dense,
+    block_sparse_to_dense,
+    coo_from_dense,
+    coo_to_dense,
+)
+from repro.train.pruning import make_mask_pytree
+
+DIFF_BACKENDS = ("goap", "pallas", "stream")
+N_RANDOM_CONFIGS = 25
+ATOL = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# random model generator (shared by the seeded sweep and hypothesis)
+# ---------------------------------------------------------------------------
+
+def random_config(rng: np.random.Generator) -> SNNConfig:
+    """A small random valid SNNConfig (kept tiny: 4 backends × 25 configs)."""
+    n_conv = int(rng.integers(1, 3))
+    pool = 2
+    input_width = int(rng.choice([8, 16]))
+    ic0 = int(rng.integers(1, 3))
+    kws = [int(rng.choice([1, 3, 5])) for _ in range(n_conv)]
+    ocs = [int(rng.integers(2, 7)) for _ in range(n_conv)]
+    conv_specs, ic = [], ic0
+    for kw, oc in zip(kws, ocs):
+        conv_specs.append((kw, ic, oc))
+        ic = oc
+    flat = ocs[-1] * (input_width // pool**n_conv)
+    hidden = int(rng.integers(4, 11))
+    n_classes = int(rng.integers(2, 6))
+    return SNNConfig(
+        conv_specs=tuple(conv_specs),
+        pool=pool,
+        fc_specs=((flat, hidden), (hidden, n_classes)),
+        input_width=input_width,
+        timesteps=int(rng.integers(1, 4)),
+        n_classes=n_classes,
+        readout=str(rng.choice(["current_sum", "spike_count"])),
+    )
+
+
+def _check_config(cfg: SNNConfig, seed: int, density: float) -> None:
+    program = compile_snn(cfg)
+    params = init_snn(jax.random.PRNGKey(seed), cfg)
+    masks = None if density >= 1.0 else make_mask_pytree(params, density)
+    rng = np.random.default_rng(seed)
+    frames = jnp.asarray(
+        (rng.random((cfg.timesteps, cfg.conv_specs[0][1], cfg.input_width))
+         < 0.5).astype(np.float32))
+    ref = np.asarray(program.apply(params, frames, "dense", masks=masks))
+    assert np.all(np.isfinite(ref))
+    for backend in DIFF_BACKENDS:
+        out = np.asarray(program.apply(params, frames, backend, masks=masks))
+        np.testing.assert_allclose(
+            out, ref, atol=ATOL,
+            err_msg=f"backend {backend!r} diverged on cfg={cfg} seed={seed}")
+
+
+@pytest.mark.parametrize("seed", range(N_RANDOM_CONFIGS))
+def test_random_configs_agree_across_backends(seed):
+    rng = np.random.default_rng(1000 + seed)
+    cfg = random_config(rng)
+    _check_config(cfg, seed, density=float(rng.uniform(0.2, 1.0)))
+
+
+@given(data=st.data())
+@settings(max_examples=N_RANDOM_CONFIGS, deadline=None)
+def test_hypothesis_configs_agree_across_backends(data):
+    seed = data.draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    cfg = random_config(rng)
+    _check_config(cfg, seed % 997, density=float(rng.uniform(0.2, 1.0)))
+
+
+# ---------------------------------------------------------------------------
+# compressed-format round-trip invariants
+# ---------------------------------------------------------------------------
+
+def _random_kernel(rng: np.random.Generator):
+    kw = int(rng.choice([1, 3, 5, 11]))
+    ic = int(rng.integers(1, 9))
+    oc = int(rng.integers(1, 17))
+    k = rng.normal(size=(kw, ic, oc)).astype(np.float32)
+    return k * (rng.random((kw, ic, oc)) < rng.uniform(0.05, 1.0))
+
+
+def _check_coo_roundtrip(kernel: np.ndarray) -> None:
+    coo = coo_from_dense(kernel)
+    np.testing.assert_array_equal(coo_to_dense(coo), kernel)
+    assert coo.nnz == int((kernel != 0).sum())
+    # entries sorted output-channel-major (the streaming order); indices
+    # decode through eqs. (1)-(2)
+    ocs = coo.row_idx // coo.ic
+    assert np.all(np.diff(ocs) >= 0)
+    np.testing.assert_array_equal(
+        kernel[coo.col_idx, coo.row_idx % coo.ic, ocs], coo.data)
+
+
+def _check_block_sparse_roundtrip(kernel: np.ndarray) -> None:
+    bs = block_sparse_from_dense(kernel, block_oc=4, block_k=8)
+    np.testing.assert_array_equal(block_sparse_to_dense(bs), kernel)
+    # every valid tile is genuinely non-empty; padding tiles are no-ops
+    for r in range(bs.n_oc_tiles):
+        for j in range(bs.max_tiles):
+            if bs.tile_valid[r, j]:
+                assert np.abs(bs.blocks[r, j]).sum() > 0
+            else:
+                assert np.abs(bs.blocks[r, j]).sum() == 0
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_sparse_format_roundtrips(seed):
+    rng = np.random.default_rng(5000 + seed)
+    kernel = _random_kernel(rng)
+    _check_coo_roundtrip(kernel)
+    _check_block_sparse_roundtrip(kernel)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=N_RANDOM_CONFIGS, deadline=None)
+def test_hypothesis_sparse_format_roundtrips(seed):
+    rng = np.random.default_rng(seed)
+    kernel = _random_kernel(rng)
+    _check_coo_roundtrip(kernel)
+    _check_block_sparse_roundtrip(kernel)

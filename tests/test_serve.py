@@ -1,0 +1,368 @@
+"""Serving tier: micro-batcher flush policy, tail padding, autotuner
+fallback, percentile math, activity counting.
+
+Tiny reduced config throughout so binds/compiles stay cheap; timing
+assertions use generous margins (CI containers jitter).
+"""
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import SNNConfig, compile_snn, init_snn, register_backend
+from repro.distributed.sharding import serve_mesh
+from repro.serve import (
+    AMCServeEngine,
+    AsyncAMCServeEngine,
+    MicroBatcher,
+    ServeStats,
+    autotune_backend,
+)
+from repro.serve.batcher import bucket_for, make_buckets
+from repro.train.pruning import make_mask_pytree
+
+CFG = SNNConfig(
+    conv_specs=((3, 2, 4), (3, 4, 8)),
+    pool=2,
+    fc_specs=((32, 16), (16, 5)),
+    input_width=16,
+    timesteps=3,
+    n_classes=5,
+)
+FRAME_SHAPE = (2, CFG.input_width)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_snn(jax.random.PRNGKey(0), CFG)
+    masks = make_mask_pytree(params, 0.5)
+    return compile_snn(CFG), params, masks
+
+
+def _iq(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n,) + FRAME_SHAPE).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladder():
+    assert make_buckets(64) == (1, 2, 4, 8, 16, 32, 64)
+    assert make_buckets(48, align=4) == (4, 8, 16, 32, 48)
+    assert make_buckets(5, align=2) == (2, 4)  # cap rounded DOWN to align
+    assert make_buckets(1, align=2) == (2,)    # ... but never below align
+    assert bucket_for(3, (1, 2, 4, 8)) == 4
+    assert bucket_for(100, (1, 2, 4, 8)) == 8
+
+
+def test_batcher_flushes_on_size():
+    mb = MicroBatcher(FRAME_SHAPE, max_batch=4, max_delay_ms=60_000)
+    for i in range(4):
+        mb.submit(_iq(1)[0])
+    t0 = time.perf_counter()
+    batch = mb.get_batch(timeout=1.0)
+    # full bucket ships immediately — nowhere near the 60 s delay cap
+    assert time.perf_counter() - t0 < 5.0
+    assert batch is not None and batch.n_real == 4 and batch.bucket == 4
+    assert batch.n_padded == 0
+    mb.close()
+
+
+def test_batcher_flushes_on_timeout_and_pads_to_bucket():
+    mb = MicroBatcher(FRAME_SHAPE, max_batch=64, max_delay_ms=50)
+    frames = _iq(3)
+    for i in range(3):
+        mb.submit(frames[i])
+    t0 = time.perf_counter()
+    batch = mb.get_batch(timeout=1.0)
+    elapsed = time.perf_counter() - t0
+    assert batch is not None and batch.n_real == 3
+    assert elapsed >= 0.04  # waited for the delay budget before flushing
+    assert batch.bucket == 4 and batch.n_padded == 1  # smallest covering bucket
+    assert batch.frames.shape == (4,) + FRAME_SHAPE
+    np.testing.assert_array_equal(batch.frames[:3], frames)
+    np.testing.assert_array_equal(batch.frames[3], np.zeros(FRAME_SHAPE))
+    mb.close()
+
+
+def test_batcher_rejects_bad_shapes_and_close_wakes_consumers():
+    mb = MicroBatcher(FRAME_SHAPE, max_batch=4, max_delay_ms=10)
+    with pytest.raises(ValueError, match="expected frame of shape"):
+        mb.submit(np.zeros((3, 7), np.float32))
+    mb.close()
+    assert mb.get_batch(timeout=1.0) is None  # sentinel wakes the consumer
+    with pytest.raises(RuntimeError, match="closed"):
+        mb.submit(np.zeros(FRAME_SHAPE, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# tail padding: exactly N predictions, no padded-frame leakage into stats
+# ---------------------------------------------------------------------------
+
+def test_sync_engine_tail_padding(setup):
+    _, params, masks = setup
+    engine = AMCServeEngine(params, CFG, masks=masks, batch_size=4,
+                            backend="dense")
+    iq = _iq(11)
+    preds = engine.classify(iq)
+    st = engine.stats
+    assert preds.shape == (11,)
+    assert st.requests == 11 and st.batches == 3
+    assert st.padded_frames == 1
+    assert len(st.latencies_s) == 11  # one latency per real request only
+    assert st.backend_batch_counts() == {"dense": 3}
+
+
+def test_async_engine_tail_padding_matches_reference(setup):
+    program, params, masks = setup
+    iq = _iq(11)
+    # reference: dense program over the exact same (padded-free) frames
+    from repro.data.pipeline import sigma_delta_encode_np
+
+    frames = jnp.asarray(sigma_delta_encode_np(iq, CFG.timesteps))
+    ref = np.asarray(program.apply_batch(params, frames, "dense",
+                                         masks=masks)).argmax(-1)
+    with AsyncAMCServeEngine(params, CFG, masks=masks, backend="dense",
+                             max_batch=8, max_delay_ms=5.0,
+                             warmup=False) as engine:
+        preds = engine.classify(iq)
+        st = engine.stats
+    assert preds.shape == (11,)
+    np.testing.assert_array_equal(preds, ref)  # padding never leaks into preds
+    assert st.requests == 11
+    assert len(st.latencies_s) == 11  # padded tail rows get no latency entry
+    assert len(st.queue_depths) == st.batches
+    assert all(b == "dense" for b in st.batch_backends)
+    # worker-maintained serving window: throughput is real even though no
+    # caller ever passed through a timed classify() section
+    assert st.wall_s > 0 and st.throughput_fps() > 0
+
+
+def test_submit_future_path_reports_throughput(setup):
+    _, params, masks = setup
+    with AsyncAMCServeEngine(params, CFG, masks=masks, backend="dense",
+                             max_batch=4, max_delay_ms=5.0,
+                             warmup=False) as engine:
+        futs = [engine.submit(f) for f in _iq(9, seed=11)]
+        preds = [f.result(timeout=30.0) for f in futs]
+        st = engine.stats
+    assert len(preds) == 9 and all(isinstance(p, int) for p in preds)
+    assert st.requests == 9
+    assert st.wall_s > 0 and st.throughput_fps() > 0
+
+
+def test_batcher_rejects_conflicting_max_batch_and_buckets():
+    with pytest.raises(ValueError, match="conflicts with explicit buckets"):
+        MicroBatcher(FRAME_SHAPE, max_batch=64, buckets=(2, 4))
+    mb = MicroBatcher(FRAME_SHAPE, buckets=(2, 4))  # buckets authoritative
+    assert mb.max_batch == 4
+    mb.close()
+
+
+def test_close_never_leaves_a_future_pending(setup):
+    _, params, masks = setup
+    engine = AsyncAMCServeEngine(params, CFG, masks=masks, backend="dense",
+                                 max_batch=2, max_delay_ms=1.0, warmup=False)
+    futures = [engine.submit(f) for f in _iq(16, seed=9)]
+    engine.close()  # immediately: some batches served, the rest drained
+    served = drained = 0
+    for fut in futures:
+        assert fut.done() or True  # must resolve promptly either way
+        try:
+            pred = fut.result(timeout=10.0)
+            assert isinstance(pred, int)
+            served += 1
+        except RuntimeError as e:
+            assert "closed" in str(e)
+            drained += 1
+    assert served + drained == 16  # nobody hangs
+    with pytest.raises(RuntimeError, match="closed"):
+        engine.submit(_iq(1)[0])
+
+
+def test_async_engine_counts_activity_like_sync(setup):
+    _, params, masks = setup
+    iq = _iq(6, seed=3)
+    sync = AMCServeEngine(params, CFG, masks=masks, batch_size=8,
+                          count_activity=True, backend="dense")
+    sync.classify(iq)
+    with AsyncAMCServeEngine(params, CFG, masks=masks, backend="dense",
+                             max_batch=8, max_delay_ms=5.0, warmup=False,
+                             count_activity=True) as engine:
+        engine.classify(iq)
+        st = engine.stats
+    # identical activity despite different batching/padding: padded tail
+    # rows are stripped before the counting hooks run
+    assert st.accumulations == sync.stats.accumulations
+    assert st.fetched_bits == sync.stats.fetched_bits
+    assert st.accumulations > 0 and st.fetched_bits > 0
+
+
+def test_sync_engine_count_path_unit(setup):
+    """The counting path (old ``_count``) alone, on a 1-frame batch."""
+    _, params, masks = setup
+    engine = AMCServeEngine(params, CFG, masks=masks, batch_size=2,
+                            count_activity=True, backend="goap")
+    engine.classify(_iq(1, seed=7))
+    st = engine.stats
+    assert st.requests == 1 and st.batches == 1
+    assert st.accumulations > 0
+    assert st.fetched_bits > st.accumulations  # >=1 bit fetched per accum
+
+
+def test_cancelled_future_does_not_poison_its_batch(setup):
+    _, params, masks = setup
+    with AsyncAMCServeEngine(params, CFG, masks=masks, backend="dense",
+                             max_batch=64, max_delay_ms=200.0,
+                             warmup=False) as engine:
+        # both requests land in the same (timeout-flushed) micro-batch
+        fut_a = engine.submit(_iq(1, seed=21)[0])
+        fut_b = engine.submit(_iq(1, seed=22)[0])
+        cancelled = fut_a.cancel()
+        pred_b = fut_b.result(timeout=30.0)  # must still resolve normally
+    assert isinstance(pred_b, int)
+    if cancelled:  # cancel() raced the worker; when it won, a is cancelled
+        assert fut_a.cancelled()
+    else:
+        assert isinstance(fut_a.result(timeout=30.0), int)
+
+
+def test_traceable_encoder_matches_numpy_encoder():
+    from repro.data.pipeline import (
+        sigma_delta_encode_batch,
+        sigma_delta_encode_np,
+    )
+
+    iq = _iq(5, seed=13)
+    for osr in (1, 3, 8):
+        np.testing.assert_array_equal(
+            np.asarray(sigma_delta_encode_batch(jnp.asarray(iq), osr)),
+            sigma_delta_encode_np(iq, osr))
+
+
+# ---------------------------------------------------------------------------
+# autotuner
+# ---------------------------------------------------------------------------
+
+def test_autotuner_picks_a_winner(setup):
+    program, params, masks = setup
+    report = autotune_backend(program, params, (4, CFG.timesteps, 2, CFG.input_width),
+                              masks=masks, candidates=("dense", "goap"),
+                              reps=1)
+    assert report.choice in ("dense", "goap")
+    assert set(report.timings_ms) == {"dense", "goap"}
+    assert not report.errors and not report.fell_back
+
+
+def test_autotuner_falls_back_to_goap_when_backend_raises(setup):
+    program, params, masks = setup
+    from repro.models import graph
+
+    def _boom(spec, layer_params, *, cfg, mask=None, quant_fn=None):
+        raise RuntimeError("no such accelerator")
+
+    snapshot = dict(graph._REGISTRY)
+    try:
+        register_backend("boom", "conv_lif", _boom)
+        register_backend("boom", "fc_lif", _boom)
+        report = autotune_backend(program, params, (4, CFG.timesteps, 2, CFG.input_width),
+                                  masks=masks, candidates=("boom",))
+        assert report.choice == "goap" and report.fell_back
+        assert "boom" in report.errors
+        assert "RuntimeError" in report.errors["boom"]
+        # a raising candidate is excluded, not fatal, when others survive
+        report = autotune_backend(program, params, (4, CFG.timesteps, 2, CFG.input_width),
+                                  masks=masks, candidates=("boom", "dense"),
+                                  reps=1)
+        assert report.choice == "dense" and not report.fell_back
+        assert "boom" in report.errors
+    finally:
+        graph._REGISTRY.clear()
+        graph._REGISTRY.update(snapshot)
+
+
+def test_async_engine_auto_backend(setup):
+    _, params, masks = setup
+    with AsyncAMCServeEngine(params, CFG, masks=masks, backend="auto",
+                             candidates=("dense", "goap"), max_batch=4,
+                             max_delay_ms=5.0, warmup=False) as engine:
+        assert engine.autotune is not None
+        assert engine.backend == engine.autotune.choice
+        preds = engine.classify(_iq(5))
+    assert preds.shape == (5,)
+
+
+# ---------------------------------------------------------------------------
+# sharded path (1-device mesh: same code path as a pod, minus the fan-out)
+# ---------------------------------------------------------------------------
+
+def test_async_engine_shard_map_path(setup):
+    program, params, masks = setup
+    iq = _iq(6, seed=5)
+    from repro.data.pipeline import sigma_delta_encode_np
+
+    frames = jnp.asarray(sigma_delta_encode_np(iq, CFG.timesteps))
+    ref = np.asarray(program.apply_batch(params, frames, "dense",
+                                         masks=masks)).argmax(-1)
+    mesh = serve_mesh(1)
+    with AsyncAMCServeEngine(params, CFG, masks=masks, backend="dense",
+                             mesh=mesh, max_batch=4, max_delay_ms=5.0,
+                             warmup=False) as engine:
+        assert all(b % 1 == 0 for b in engine.batcher.buckets)
+        preds = engine.classify(iq)
+    np.testing.assert_array_equal(preds, ref)
+
+
+# ---------------------------------------------------------------------------
+# ServeStats percentile math vs numpy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 5, 100, 997])
+def test_percentiles_match_numpy(n):
+    rng = np.random.default_rng(n)
+    lat = rng.exponential(scale=0.01, size=n).tolist()
+    st = ServeStats(latencies_s=list(lat))
+    for q in (50.0, 95.0, 99.0, 0.0, 100.0, 37.3):
+        np.testing.assert_allclose(
+            st.latency_percentile(q), np.percentile(lat, q), rtol=1e-12)
+    np.testing.assert_allclose(st.p50_ms, np.percentile(lat, 50) * 1e3)
+    np.testing.assert_allclose(st.p95_ms, np.percentile(lat, 95) * 1e3)
+    np.testing.assert_allclose(st.p99_ms, np.percentile(lat, 99) * 1e3)
+
+
+def test_percentiles_empty_stats():
+    st = ServeStats()
+    assert st.p50_ms == 0.0 and st.p99_ms == 0.0
+    assert st.throughput_fps() == 0.0
+    assert st.mean_queue_depth() == 0.0
+
+
+def test_stats_histories_are_bounded_but_totals_exact():
+    st = ServeStats()
+    cap = ServeStats.MAX_SAMPLES
+    st.record_latencies([0.001] * (cap + 100))
+    assert len(st.latencies_s) == cap
+    for i in range(cap + 50):
+        st.record_batch("dense", queue_depth=i)
+    st.record_batch("goap", queue_depth=0)
+    assert len(st.queue_depths) <= cap and len(st.batch_backends) <= cap
+    # exact totals survive the history trimming
+    assert st.backend_batch_counts() == {"dense": cap + 50, "goap": 1}
+    assert st.batches == cap + 51
+
+
+def test_stats_summary_roundtrips_to_json():
+    import json
+
+    st = ServeStats(requests=3, batches=1, backend="dense",
+                    batch_backends=["dense"], latencies_s=[0.1, 0.2, 0.3],
+                    queue_depths=[2], wall_s=0.5)
+    d = json.loads(json.dumps(st.summary()))
+    assert d["requests"] == 3
+    assert d["backend_batch_counts"] == {"dense": 1}
+    assert d["throughput_fps"] == pytest.approx(6.0)

@@ -1,0 +1,77 @@
+"""Golden-counter regression: the stream backend's Tables I/III numbers.
+
+The ``stream`` backend interprets the precomputed Algorithm-2 schedule and
+returns the compute/extra/empty iteration counts the paper reports in
+Tables I and III.  Everything here is deterministic — paper config
+(``configs/saocds_amc.py``), seeded init, magnitude masks at 50% density,
+seeded input frames — so the totals are pinned to literal values: any
+change to the COO sort order, the schedule builder, the mask rule, or the
+interpreter that shifts these numbers (and hence the paper-table
+reproductions) fails loudly instead of drifting silently.
+
+Regenerate after an *intentional* semantic change with:
+
+    PYTHONPATH=src python tests/test_stream_golden.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import compile_snn, init_snn, stream_totals
+from repro.configs.saocds_amc import CONFIG
+from repro.train.pruning import make_mask_pytree
+
+DENSITY = 0.5
+
+# Per-layer static schedule geometry (input-independent: fixed by the
+# masked weights alone) and the gated accumulation counts for the seeded
+# input below.  nnz at 50%: conv1 11*2*16/2 = 176, conv2 11*16*32/2 =
+# 2816, conv3 5*32*64/2 = 5120 (+1 empty stall slot while I[1] streams in).
+GOLDEN_LAYERS = {
+    "conv1": {"reps_per_timestep": 176, "compute_iters": 176,
+              "extra_iters": 0, "empty_iters": 0, "accumulations": 88895},
+    "conv2": {"reps_per_timestep": 2816, "compute_iters": 2816,
+              "extra_iters": 0, "empty_iters": 0, "accumulations": 437602},
+    "conv3": {"reps_per_timestep": 5121, "compute_iters": 5120,
+              "extra_iters": 0, "empty_iters": 1, "accumulations": 263433},
+}
+GOLDEN_TOTALS = {"compute_iters": 8112, "extra_iters": 0, "empty_iters": 1,
+                 "reps_per_timestep": 8113, "accumulations": 789930}
+
+
+def _run():
+    program = compile_snn(CONFIG)
+    params = init_snn(jax.random.PRNGKey(0), CONFIG)
+    masks = make_mask_pytree(params, DENSITY)
+    rng = np.random.default_rng(0)
+    frames = jnp.asarray(
+        (rng.random((CONFIG.timesteps, CONFIG.conv_specs[0][1],
+                     CONFIG.input_width)) < 0.5).astype(np.float32))
+    _, counters = program.apply(params, frames, "stream", masks=masks,
+                                return_counters=True)
+    return counters
+
+
+def test_stream_counters_match_golden_paper_config():
+    counters = _run()
+    assert set(counters) == set(GOLDEN_LAYERS)
+    for name, golden in GOLDEN_LAYERS.items():
+        got = counters[name]
+        assert got["timesteps"] == CONFIG.timesteps
+        for key, want in golden.items():
+            assert int(np.asarray(got[key])) == want, (
+                f"{name}.{key}: got {int(np.asarray(got[key]))}, "
+                f"golden {want} — Tables I/III reproduction drifted")
+    totals = stream_totals(counters)
+    for key, want in GOLDEN_TOTALS.items():
+        assert int(np.asarray(totals[key])) == want
+    # schedule invariant: every slot is exactly one of the three kinds
+    assert (GOLDEN_TOTALS["compute_iters"] + GOLDEN_TOTALS["extra_iters"]
+            + GOLDEN_TOTALS["empty_iters"]
+            == GOLDEN_TOTALS["reps_per_timestep"])
+
+
+if __name__ == "__main__":  # regeneration helper
+    for name, c in _run().items():
+        print(name, {k: int(np.asarray(v)) for k, v in c.items()})
