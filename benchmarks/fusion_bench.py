@@ -1,0 +1,176 @@
+"""Fusion benchmark: fused streaming executor vs layer-by-layer execution,
+plus cold/memory/disk plan-compile cost, on the paper config.
+
+Two questions, answered with wall-clock numbers in ``BENCH_fusion.json``:
+
+* **Execution** — does threading all layers through one ``lax.scan``
+  (``ExecutionPlan.batch``, the paper's inter-layer pipeline analogue)
+  beat the layer-by-layer path (``plan.bound.batch``) that materializes
+  every intermediate (T, C, W) sequence?  Measured per backend on the
+  paper config at 50% density; the two paths are also asserted allclose.
+* **Compilation** — what does ``compile_plan`` cost cold (artifacts
+  derived from weights), warm in memory (same process rebind: trainer
+  eval loops), and warm from disk (process restart: serve redeploys)?
+  The artifact build counter is recorded alongside so "cached" provably
+  means "nothing rebuilt".
+
+Run:  PYTHONPATH=src python benchmarks/fusion_bench.py [--smoke] [--out p]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import compile_plan, compile_snn, init_snn
+from repro.configs.saocds_amc import CONFIG as CFG
+from repro.models.graph import artifact_build_count
+from repro.plan import PlanCache
+from repro.train.pruning import make_mask_pytree
+
+NAME = "fusion_bench"
+
+DENSITY = 0.5
+EXEC_BACKENDS = ("dense", "goap")  # pallas interpret mode is CPU-meaningless
+
+
+def _spike_frames(batch: int) -> jnp.ndarray:
+    rng = np.random.default_rng(0)
+    shape = (batch, CFG.timesteps, CFG.conv_specs[0][1], CFG.input_width)
+    return jnp.asarray((rng.random(shape) < 0.5).astype(np.float32))
+
+
+def _time(fn, *args, reps: int = 3) -> float:
+    jax.block_until_ready(fn(*args))  # compile + warm up
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(batch: int = 32, reps: int = 3) -> dict:
+    program = compile_snn(CFG)
+    params = init_snn(jax.random.PRNGKey(0), CFG)
+    masks = make_mask_pytree(params, DENSITY)
+    frames = _spike_frames(batch)
+
+    # -- plan compile: cold vs memory-cached vs disk-cached -----------------
+    tmp = tempfile.mkdtemp(prefix="fusion-bench-plans-")
+    try:
+        cache = PlanCache(tmp)
+        n0 = artifact_build_count()
+        t0 = time.perf_counter()
+        compile_plan(program, params, masks=masks, assignment="goap",
+                     cache=cache)
+        cold_s = time.perf_counter() - t0
+        cold_builds = artifact_build_count() - n0
+
+        t0 = time.perf_counter()
+        compile_plan(program, params, masks=masks, assignment="goap",
+                     cache=cache)
+        memory_s = time.perf_counter() - t0
+        memory_builds = artifact_build_count() - n0 - cold_builds
+
+        cache2 = PlanCache(tmp)  # fresh memory over same disk dir = restart
+        t0 = time.perf_counter()
+        compile_plan(program, params, masks=masks, assignment="goap",
+                     cache=cache2)
+        disk_s = time.perf_counter() - t0
+        disk_builds = (artifact_build_count() - n0 - cold_builds
+                       - memory_builds)
+
+        compile_row = {
+            "cold_s": cold_s, "cold_artifact_builds": cold_builds,
+            "memory_hit_s": memory_s,
+            "memory_hit_artifact_builds": memory_builds,
+            "disk_hit_s": disk_s, "disk_hit_artifact_builds": disk_builds,
+            "cold_over_memory": cold_s / max(memory_s, 1e-9),
+            "cold_over_disk": cold_s / max(disk_s, 1e-9),
+        }
+
+        # -- execution: fused single-scan vs layer-by-layer -----------------
+        rows = []
+        for backend in EXEC_BACKENDS:
+            plan = compile_plan(program, params, masks=masks,
+                                assignment=backend, cache=cache)
+            layered = jax.jit(plan.bound.batch)
+            fused = jax.jit(plan.batch)
+            out_l = np.asarray(layered(frames))
+            out_f = np.asarray(fused(frames))
+            err = float(np.abs(out_l - out_f).max())
+            t_layered = _time(layered, frames, reps=reps)
+            t_fused = _time(fused, frames, reps=reps)
+            rows.append({
+                "backend": backend,
+                "layered_ms": t_layered * 1e3,
+                "fused_ms": t_fused * 1e3,
+                "layered_fps": batch / t_layered,
+                "fused_fps": batch / t_fused,
+                "fused_speedup": t_layered / max(t_fused, 1e-9),
+                "max_abs_err": err,
+            })
+            assert err <= 1e-5, f"fused != layered for {backend}: {err}"
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    return {
+        "config": "saocds-amc (paper)",
+        "density": DENSITY,
+        "batch": batch,
+        "jax_backend": jax.default_backend(),
+        "compile": compile_row,
+        "execution": rows,
+    }
+
+
+def format_table(res: dict) -> str:
+    c = res["compile"]
+    lines = [
+        f"Fusion bench: paper config, density {res['density']}, batch "
+        f"{res['batch']}, {res['jax_backend']}",
+        f"  compile_plan  cold {c['cold_s'] * 1e3:8.1f} ms "
+        f"({c['cold_artifact_builds']} artifact builds)   "
+        f"memory hit {c['memory_hit_s'] * 1e3:6.2f} ms   "
+        f"disk hit {c['disk_hit_s'] * 1e3:6.2f} ms "
+        f"(both rebuild {c['memory_hit_artifact_builds']}/"
+        f"{c['disk_hit_artifact_builds']} artifacts)",
+    ]
+    for r in res["execution"]:
+        lines.append(
+            f"  {r['backend']:6s} layered {r['layered_ms']:8.1f} ms "
+            f"({r['layered_fps']:7.1f} fps)   fused {r['fused_ms']:8.1f} ms "
+            f"({r['fused_fps']:7.1f} fps)   speedup {r['fused_speedup']:.2f}x"
+            f"   err {r['max_abs_err']:.1e}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced batch/reps for CI smoke runs")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_fusion.json")
+    args = ap.parse_args(argv)
+
+    batch = args.batch if args.batch else (8 if args.smoke else 32)
+    reps = args.reps if args.reps else (1 if args.smoke else 3)
+    res = run(batch=batch, reps=reps)
+    print(format_table(res))
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(res, indent=1, default=str))
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,7 +19,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.api import SNNConfig, compile_snn, init_snn
+from repro.api import SNNConfig, compile_plan, compile_snn, init_snn
 from repro.core.goap import conv1d_dense_oracle
 from repro.core.lif import init_lif_params
 from repro.core.sparse_format import block_sparse_from_dense
@@ -116,7 +116,8 @@ def run() -> dict:
                          .astype(np.float32))
     ref = program.apply(params, frames, "dense", masks=masks)
     for backend in ("dense", "goap", "pallas"):
-        bound = program.bind(params, backend, masks=masks)
+        bound = compile_plan(program, params, masks=masks,
+                             assignment=backend).bound
         out = bound(frames)
         rows.append({
             "kernel": f"program/{backend}",

@@ -20,6 +20,7 @@ OUT = pathlib.Path("experiments/bench")
 def _modules(quick: bool):
     from . import (
         accuracy_sweep,
+        fusion_bench,
         kernel_bench,
         roofline,
         serve_bench,
@@ -30,7 +31,7 @@ def _modules(quick: bool):
     )
 
     mods = [table1_goap_vs_sw, table2_coo_overhead, table3_accum_ratio,
-            table45_perf_model, kernel_bench, roofline]
+            table45_perf_model, kernel_bench, fusion_bench, roofline]
     if not quick:
         # several CPU-minutes each: training sweep + full 4096-frame serve run
         mods.extend([accuracy_sweep, serve_bench])

@@ -27,7 +27,10 @@ def main():
     ap.add_argument("--train-steps", type=int, default=120)
     ap.add_argument("--density", type=float, default=0.5)
     ap.add_argument("--backend", default="auto",
-                    help="'auto' races the candidate backends at bind time")
+                    help="'auto' races the candidate backends at bind time; "
+                         "'per-layer' races them layer by layer and serves "
+                         "the heterogeneous assignment through the fused "
+                         "streaming plan")
     ap.add_argument("--max-batch", type=int, default=32)
     ap.add_argument("--max-delay-ms", type=float, default=5.0)
     args = ap.parse_args()
@@ -46,6 +49,9 @@ def main():
             timings = ", ".join(f"{k} {v:.1f}ms"
                                 for k, v in engine.autotune.timings_ms.items())
             print(f"autotune raced [{timings}] -> pinned '{engine.backend}'")
+        if engine.perlayer is not None:
+            print(f"per-layer autotune -> {engine.assignment} "
+                  f"(fused streaming plan {engine.plan.digest[:12]}…)")
         iq, labels, _ = generate_batch(seed=4242, batch=args.requests,
                                        snr_db=10.0)
         preds = engine.classify(iq)

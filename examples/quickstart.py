@@ -16,7 +16,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.api import compile_snn, init_snn, stream_totals
+from repro.api import compile_plan, compile_snn, init_snn, stream_totals
 from repro.configs.saocds_amc import CONFIG as SNN_CONFIG
 from repro.core.cost_model import bits_fetched, goap_conv_counts, sw_conv_counts
 from repro.core.saocds import pad_same
@@ -63,6 +63,23 @@ def main():
           f"{totals['extra_iters']} extra + {totals['empty_iters']} empty "
           f"iterations/timestep, {float(totals['accumulations']):.0f} gated "
           f"accumulations for one sample")
+
+    # 6. the plan compiler precomputes every bind-time artifact (COO
+    # kernels, schedules, cost priors) once into a content-hashed,
+    # disk-cached ExecutionPlan; its fused streaming executor threads all
+    # layers through a single scan over timesteps — the software form of
+    # the paper's control-free inter-layer pipeline (§III-C.4).  Layers
+    # can even mix backends per layer:
+    plan = compile_plan(program, params, masks=masks,
+                        assignment={"conv1": "goap"}, default_backend="dense")
+    fused_logits, _ = plan.run_streaming(jnp.asarray(frames[0]))
+    err = float(jnp.abs(fused_logits - goap_logits[0]).max())
+    print(f"fused streaming plan {plan.digest[:12]}… "
+          f"(assignment {plan.assignment}): max err vs layer-by-layer "
+          f"{err:.2e}")
+    assert compile_plan(program, params, masks=masks,
+                        assignment={"conv1": "goap"},
+                        default_backend="dense") is plan  # cache hit
 
     # paper Table I-style counts on this batch's first conv layer
     kw, ic, oc = cfg.conv_specs[0]

@@ -15,6 +15,19 @@ SNN AMC classifier through the unified layer-graph API:
     logits, counters = program.apply(params, frames, backend="stream",
                                      return_counters=True)     # Tables I/III
 
+With concrete weights, the plan compiler precomputes every bind-time
+artifact once (content-hashed, disk-cached) and fuses all layers into a
+single scan over timesteps — the paper's control-free inter-layer
+pipeline — with optional per-layer backend assignment:
+
+    from repro.api import compile_plan
+
+    plan = compile_plan(program, params, masks=masks,
+                        assignment={"conv1": "pallas", "fc1": "dense"},
+                        default_backend="goap")
+    logits, counters = plan.run_streaming(frames)   # fused single scan
+    preds = plan.batch(frames_b)
+
 New execution strategies plug in via ``register_backend`` without touching
 the model definition.
 """
@@ -24,6 +37,7 @@ from repro.models.graph import (
     BoundProgram,
     Conv1dLIF,
     FCLIF,
+    LayerCell,
     LayerSpec,
     MaxPool,
     Readout,
@@ -34,6 +48,12 @@ from repro.models.graph import (
     get_backend,
     register_backend,
     stream_totals,
+)
+from repro.plan import (
+    ExecutionPlan,
+    PlanCache,
+    compile_plan,
+    run_streaming,
 )
 from repro.models.snn import (
     SNNConfig,
@@ -46,6 +66,7 @@ from repro.models.snn import (
 __all__ = [
     # graph / program
     "LayerSpec",
+    "LayerCell",
     "Conv1dLIF",
     "MaxPool",
     "FCLIF",
@@ -54,6 +75,11 @@ __all__ = [
     "SNNProgram",
     "BoundProgram",
     "compile_snn",
+    # plan compiler / fused streaming executor
+    "ExecutionPlan",
+    "PlanCache",
+    "compile_plan",
+    "run_streaming",
     # backend registry
     "register_backend",
     "available_backends",

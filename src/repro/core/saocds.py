@@ -45,6 +45,7 @@ __all__ = [
     "sw_conv_layer",
     "wm_fc_step",
     "wm_fc_layer",
+    "make_schedule_step",
     "schedule_interpreter",
 ]
 
@@ -176,25 +177,16 @@ def _first_touch_flags(sched: Schedule) -> np.ndarray:
     return flags
 
 
-def schedule_interpreter(
-    spikes_t: jax.Array,
-    sched: Schedule,
-    lif: LIFParams,
-    oi: int,
-    oc: int,
-    v0: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, jax.Array, dict]:
-    """Execute the static SAOCDS schedule, one iteration per scan step.
+def make_schedule_step(sched: Schedule, lif: LIFParams, oc: int):
+    """Build the per-timestep executor of a static SAOCDS schedule.
 
-    spikes_t: (T, IC, WI) pre-padded binary frames.  Returns
-    (out_spikes (T, OC, OI), v_final, counts) where counts carries the
-    per-run iteration statistics (compute/extra/empty reps and the gated
-    accumulation count — paper Tables I/III quantities).
+    Returns ``one_timestep(v, ifm) -> (v_next, (out_spikes, acc_count))``
+    where ``v`` is the (OC, OI) membrane state and ``ifm`` the pre-padded
+    (IC, WI) binary frame for this timestep.  The schedule arrays are
+    staged into device constants once, so the returned step can be reused
+    by both the whole-sequence interpreter and the per-timestep cell
+    protocol (fused inter-layer streaming).
     """
-    t_steps, _, wi = spikes_t.shape
-    if v0 is None:
-        v0 = jnp.zeros((oc, oi), dtype=jnp.float32)
-
     kind = jnp.asarray(sched.kind)
     weight = jnp.asarray(sched.weight)
     oc_arr = jnp.asarray(np.maximum(sched.oc, 0))
@@ -204,11 +196,11 @@ def schedule_interpreter(
     emit = jnp.asarray(sched.emit)
     decay_flag = jnp.asarray(_first_touch_flags(sched))
 
-    alpha = jnp.broadcast_to(lif.alpha, (oc, oi))
-    theta = jnp.broadcast_to(lif.theta, (oc, oi))
-    v_th = jnp.broadcast_to(lif.v_th, (oc, oi))
-
     def one_timestep(v, ifm):
+        oi = v.shape[-1]
+        alpha = jnp.broadcast_to(lif.alpha, (oc, oi))
+        theta = jnp.broadcast_to(lif.theta, (oc, oi))
+        v_th = jnp.broadcast_to(lif.v_th, (oc, oi))
         out = jnp.zeros((oc, oi), dtype=jnp.float32)
 
         def iteration(carry, idx):
@@ -251,6 +243,29 @@ def schedule_interpreter(
         )
         return v, (out, acc)
 
+    return one_timestep
+
+
+def schedule_interpreter(
+    spikes_t: jax.Array,
+    sched: Schedule,
+    lif: LIFParams,
+    oi: int,
+    oc: int,
+    v0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, dict]:
+    """Execute the static SAOCDS schedule, one iteration per scan step.
+
+    spikes_t: (T, IC, WI) pre-padded binary frames.  Returns
+    (out_spikes (T, OC, OI), v_final, counts) where counts carries the
+    per-run iteration statistics (compute/extra/empty reps and the gated
+    accumulation count — paper Tables I/III quantities).
+    """
+    t_steps, _, wi = spikes_t.shape
+    if v0 is None:
+        v0 = jnp.zeros((oc, oi), dtype=jnp.float32)
+
+    one_timestep = make_schedule_step(sched, lif, oc)
     v_final, (outs, accs) = jax.lax.scan(one_timestep, v0, spikes_t)
     counts = {
         "reps_per_timestep": sched.reps,

@@ -68,8 +68,11 @@ def main(argv=None) -> int:
                     help="saocds-amc: async micro-batched tier or the "
                          "legacy per-chunk loop")
     ap.add_argument("--backend", default="auto",
-                    help="saocds-amc: execution backend, or 'auto' to race "
-                         "the candidates at bind time (async engine only)")
+                    help="saocds-amc: execution backend, 'auto' to race the "
+                         "candidates at bind time, or 'per-layer' to race "
+                         "them layer by layer and serve the heterogeneous "
+                         "assignment through the fused streaming plan "
+                         "(async engine only)")
     ap.add_argument("--max-delay-ms", type=float, default=5.0)
     ap.add_argument("--workers", type=int, default=1)
     args = ap.parse_args(argv)
@@ -85,7 +88,11 @@ def main(argv=None) -> int:
         masks = make_mask_pytree(params, args.density)
         iq, labels, _ = generate_batch(0, args.requests, snr_db=10.0)
         if args.engine == "sync":
-            backend = "goap" if args.backend == "auto" else args.backend
+            backend = args.backend
+            if backend in ("auto", "per-layer"):
+                print(f"(sync engine does not support --backend {backend}; "
+                      "using goap)")
+                backend = "goap"
             engine = AMCServeEngine(params, SNN_CONFIG, masks=masks,
                                     batch_size=args.batch,
                                     count_activity=True, backend=backend)
@@ -99,6 +106,10 @@ def main(argv=None) -> int:
                 t = ", ".join(f"{k}={v:.1f}ms"
                               for k, v in engine.autotune.timings_ms.items())
                 print(f"autotune[{t}] -> {engine.backend}")
+            if engine.perlayer is not None:
+                a = ", ".join(f"{k}={v}"
+                              for k, v in engine.assignment.items())
+                print(f"per-layer autotune -> [{a}] (fused streaming plan)")
             preds = engine.classify(iq)
             engine.close()
         st = engine.stats

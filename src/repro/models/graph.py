@@ -15,6 +15,14 @@ cost (paper §III, Tables I/III).  This module makes that claim structural:
   future execution strategies (sharded, batched-async, quantized) plug in
   without touching the model.
 
+Backend factories return per-timestep :class:`LayerCell` objects —
+``step(state, x_t) -> (state, y_t)`` plus an explicit ``init_state`` — not
+whole-sequence stages.  One generic driver (:func:`run_cell`) scans a cell
+over time for the layer-by-layer path, and the same cells are threaded
+through a *single* scan over timesteps by the fused inter-layer executor
+(:mod:`repro.plan.streaming`) — the software analogue of the paper's
+control-free inter-layer pipeline.
+
 Built-in backends:
 
 ========  ==================================================================
@@ -31,11 +39,17 @@ stream    faithful Algorithm-2 schedule interpreter; also returns the
 params).  ``goap``/``pallas``/``stream`` precompute numpy artifacts (COO
 kernels, static schedules, block-sparse tilings) at bind time and therefore
 need **concrete** weights — bind outside jit, then jit the bound program.
+With concrete weights, prefer :func:`repro.plan.compile_plan`: it derives
+each layer's artifacts once into a content-hashed, disk-cached
+``ExecutionPlan`` (repeated binds are near-free) and supports per-layer
+backend assignment plus the fused streaming executor.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -45,7 +59,7 @@ import jax.numpy as jnp
 
 from repro.core.goap import conv1d_dense_oracle, goap_conv_nnz
 from repro.core.lif import lif_step
-from repro.core.saocds import max_pool_spikes, pad_same, schedule_interpreter
+from repro.core.saocds import make_schedule_step, max_pool_spikes, pad_same
 from repro.core.sparse_format import (
     CooKernel,
     block_sparse_from_dense,
@@ -64,6 +78,9 @@ __all__ = [
     "register_backend",
     "available_backends",
     "get_backend",
+    "LayerCell",
+    "run_cell",
+    "artifact_build_count",
     "SNNProgram",
     "BoundProgram",
     "compile_snn",
@@ -115,6 +132,24 @@ def Readout(mode: str) -> LayerSpec:
     return LayerSpec(kind=KIND_READOUT, name="readout", mode=mode)
 
 
+def validate_unique_names(specs: Sequence[LayerSpec]) -> None:
+    """Weighted-layer names key the counters dict and plan assignments —
+    two same-named conv/FC layers would silently overwrite each other's
+    Tables I/III counts, so collisions fail loudly here instead.  Pool and
+    readout layers never key anything and may share names (hand-built
+    graphs often repeat the default ``MaxPool`` name)."""
+    seen: Dict[str, str] = {}
+    for s in specs:
+        if s.kind not in (KIND_CONV, KIND_FC):
+            continue
+        if s.name in seen:
+            raise ValueError(
+                f"duplicate layer name {s.name!r} ({seen[s.name]} and "
+                f"{s.kind}): layer names key per-layer counters and "
+                "backend assignments; give each layer a unique name")
+        seen[s.name] = s.kind
+
+
 def build_layer_graph(cfg: SNNConfig) -> Tuple[LayerSpec, ...]:
     """Derive the declarative layer graph from an ``SNNConfig``."""
     cfg.validate()
@@ -125,7 +160,66 @@ def build_layer_graph(cfg: SNNConfig) -> Tuple[LayerSpec, ...]:
     for i, (din, dout) in enumerate(cfg.fc_specs):
         layers.append(FCLIF(i, din, dout))
     layers.append(Readout(cfg.readout))
+    validate_unique_names(layers)
     return tuple(layers)
+
+
+# ---------------------------------------------------------------------------
+# The cell protocol.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerCell:
+    """Per-timestep execution of one layer.
+
+    * ``init_state(x_t)`` — build the carried state from a per-timestep
+      input *template* (anything with ``.shape``/``.dtype`` leaves, e.g. a
+      ``jax.ShapeDtypeStruct``): conv/FC membrane potentials, counter
+      accumulators, ``()`` for stateless layers.
+    * ``step(state, x_t) -> (state, y_t)`` — advance one timestep.
+    * ``finalize(state)`` — optional; extract the layer's terminal value
+      (readout logits, stream iteration counters) after the last timestep.
+
+    The same cell serves both executors: the layer-by-layer path scans it
+    over time in isolation (:func:`run_cell`), the fused streaming executor
+    threads every layer's state through one scan over timesteps.
+
+    ``seq`` is an optional whole-sequence fast path ``seq(xs) -> ys`` for
+    the layer-by-layer executor only (e.g. the pallas FC's single batched
+    (T, IN) matmul + fused-LIF kernel, or vectorized pooling); it must be
+    numerically equivalent to scanning ``step`` and is only valid for
+    cells without a ``finalize``.
+    """
+
+    init_state: Callable[[Any], Any]
+    step: Callable[[Any, Any], Tuple[Any, Any]]
+    finalize: Optional[Callable[[Any], Any]] = None
+    seq: Optional[Callable[[Any], Any]] = None
+
+
+def timestep_template(xs):
+    """Per-timestep ShapeDtypeStruct template of a (T, ...) sequence."""
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), xs)
+
+
+def run_cell(cell: LayerCell, xs):
+    """Drive one cell over a (T, ...) sequence (the layer-by-layer path).
+
+    Returns ``(ys, final_state, aux)`` where ``aux`` is the cell's
+    finalized value (None for cells without a ``finalize``).
+    """
+    if cell.seq is not None:
+        return cell.seq(xs), None, None
+    state = cell.init_state(timestep_template(xs))
+    state, ys = jax.lax.scan(cell.step, state, xs)
+    aux = cell.finalize(state) if cell.finalize is not None else None
+    return ys, state, aux
+
+
+def _spikes_of(x_t):
+    """Input spikes of a per-timestep value (FC cells emit (spikes, currents))."""
+    return x_t[0] if isinstance(x_t, tuple) else x_t
 
 
 # ---------------------------------------------------------------------------
@@ -133,12 +227,15 @@ def build_layer_graph(cfg: SNNConfig) -> Tuple[LayerSpec, ...]:
 # ---------------------------------------------------------------------------
 
 # A backend factory takes (spec, layer_params, cfg=, mask=, quant_fn=) and
-# returns the bound stage callable for that layer.  Stage contracts:
-#   conv_lif: stage(x (T, IC, W))  -> (spikes (T, OC, W), aux dict | None)
-#   maxpool:  stage(x)             -> pooled x
-#   fc_lif:   stage(x (T, ...))    -> (spikes (T, OUT), currents (T, OUT))
-#   readout:  stage((spikes, currents)) -> logits
-BackendFactory = Callable[..., Callable]
+# returns the layer's LayerCell.  Per-timestep contracts:
+#   conv_lif: step(v, x_t (IC, W))        -> (v, spikes_t (OC, W))
+#   maxpool:  step((), x_t)               -> ((), pooled x_t)
+#   fc_lif:   step(v, x_t)                -> (v, (spikes_t (OUT,), currents_t))
+#   readout:  step(acc, (s_t, c_t))       -> (acc + ..., s_t); finalize -> logits
+# Factories may additionally accept an ``artifacts`` dict (see
+# repro.plan.compile): precomputed entries are consumed instead of rebuilt,
+# and fresh derivations are recorded into it for caching.
+BackendFactory = Callable[..., LayerCell]
 
 # Backends shared by every execution strategy (pooling and readout carry no
 # weights, so there is nothing dataflow-specific about them) register under
@@ -176,8 +273,30 @@ def get_backend(name: str, layer_kind: str) -> BackendFactory:
 
 
 # ---------------------------------------------------------------------------
-# Bind-time helpers.
+# Bind-time helpers (artifact derivation + build accounting).
 # ---------------------------------------------------------------------------
+
+# Counts every *derivation* of an expensive bind-time artifact (COO kernels,
+# Algorithm-2 schedules, block-sparse tilings).  The plan cache's whole job
+# is to keep these from re-running — tests and benchmarks assert on it.
+ARTIFACT_BUILDS: collections.Counter = collections.Counter()
+
+
+def artifact_build_count() -> int:
+    """Total expensive artifact derivations since process start."""
+    return sum(ARTIFACT_BUILDS.values())
+
+
+def _artifact(artifacts: Optional[dict], key: str, build: Callable[[], Any]):
+    """Fetch ``key`` from the artifacts dict or build (and record) it."""
+    if artifacts is not None and artifacts.get(key) is not None:
+        return artifacts[key]
+    ARTIFACT_BUILDS[key] += 1
+    val = build()
+    if artifacts is not None:
+        artifacts[key] = val
+    return val
+
 
 def _effective_weight(layer_params, mask, quant_fn):
     w = layer_params["w"]
@@ -188,8 +307,18 @@ def _effective_weight(layer_params, mask, quant_fn):
     return w
 
 
-def _concrete_weight(spec: LayerSpec, layer_params, mask, quant_fn) -> np.ndarray:
+def _weight(layer_params, mask, quant_fn, artifacts) -> jax.Array:
+    """Effective (masked+quantized) weight, honoring a precomputed one."""
+    if artifacts is not None and artifacts.get("w_eff") is not None:
+        return jnp.asarray(artifacts["w_eff"])
+    return _effective_weight(layer_params, mask, quant_fn)
+
+
+def _concrete_weight(spec: LayerSpec, layer_params, mask, quant_fn,
+                     artifacts=None) -> np.ndarray:
     """Numpy weights for backends that precompute sparse artifacts."""
+    if artifacts is not None and artifacts.get("w_eff") is not None:
+        return np.asarray(artifacts["w_eff"])
     try:
         return np.asarray(_effective_weight(layer_params, mask, quant_fn))
     except jax.errors.TracerArrayConversionError as e:
@@ -201,31 +330,45 @@ def _concrete_weight(spec: LayerSpec, layer_params, mask, quant_fn) -> np.ndarra
         ) from e
 
 
-def _layer_coo(spec: LayerSpec, layer_params, mask, quant_fn) -> CooKernel:
+def _layer_coo(spec: LayerSpec, layer_params, mask, quant_fn,
+               artifacts=None) -> CooKernel:
     # accept pre-sparsified params ({"coo": ...}) as produced by
     # ``sparsify_params`` as well as raw dense params ({"w": ...})
     if "coo" in layer_params:
         return layer_params["coo"]
-    return coo_from_dense(_concrete_weight(spec, layer_params, mask, quant_fn))
+    return _artifact(artifacts, "coo", lambda: coo_from_dense(
+        _concrete_weight(spec, layer_params, mask, quant_fn, artifacts)))
 
 
 # ---------------------------------------------------------------------------
-# Common (backend-independent) stages.
+# Common (backend-independent) cells.
 # ---------------------------------------------------------------------------
 
-def _common_maxpool(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
-    def stage(x):
-        return max_pool_spikes(x, spec.pool)
-    return stage
+def _common_maxpool(spec: LayerSpec, layer_params, *, cfg, mask=None,
+                    quant_fn=None, artifacts=None) -> LayerCell:
+    def step(state, x_t):
+        return state, max_pool_spikes(x_t, spec.pool)
+
+    # pooling acts on trailing dims only, so the whole (T, C, W) sequence
+    # pools in one vectorized op on the layer-by-layer path
+    return LayerCell(init_state=lambda x_t: (), step=step,
+                     seq=lambda xs: max_pool_spikes(xs, spec.pool))
 
 
-def _common_readout(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
-    def stage(fc_out):
-        spikes, currents = fc_out
-        if spec.mode == "current_sum":
-            return currents.sum(axis=0)
-        return spikes.sum(axis=0)
-    return stage
+def _common_readout(spec: LayerSpec, layer_params, *, cfg, mask=None,
+                    quant_fn=None, artifacts=None) -> LayerCell:
+    use_current = spec.mode == "current_sum"
+
+    def init_state(x_t):
+        src = x_t[1] if use_current else x_t[0]
+        return jnp.zeros(src.shape, src.dtype)
+
+    def step(acc, x_t):
+        spikes_t, currents_t = x_t
+        return acc + (currents_t if use_current else spikes_t), spikes_t
+
+    return LayerCell(init_state=init_state, step=step,
+                     finalize=lambda acc: acc)
 
 
 register_backend(COMMON, KIND_POOL, _common_maxpool)
@@ -233,43 +376,53 @@ register_backend(COMMON, KIND_READOUT, _common_readout)
 
 
 # ---------------------------------------------------------------------------
+# Conv/FC cell builders shared by the backends (the old per-factory scan
+# boilerplate, written exactly once).
+# ---------------------------------------------------------------------------
+
+def _conv_cell(kw: int, oc: int, lif, current_fn, dtype) -> LayerCell:
+    """LIF conv cell: pad the frame, compute currents, advance the LIF."""
+
+    def init_state(x_t):
+        return jnp.zeros((oc, x_t.shape[-1]), dtype)
+
+    def step(v, x_t):
+        return lif_step(v, current_fn(pad_same(_spikes_of(x_t), kw)), lif)
+
+    return LayerCell(init_state=init_state, step=step)
+
+
+def _fc_cell(w: jax.Array, lif, current_fn=None) -> LayerCell:
+    """LIF FC cell; emits (spikes_t, currents_t) for the readout."""
+    if current_fn is None:
+        current_fn = lambda s: s.astype(w.dtype) @ w
+
+    def init_state(x_t):
+        return jnp.zeros((w.shape[1],), w.dtype)
+
+    def step(v, x_t):
+        cur = current_fn(_spikes_of(x_t).reshape(-1))
+        v_next, out = lif_step(v, cur, lif)
+        return v_next, (out, cur)
+
+    return LayerCell(init_state=init_state, step=step)
+
+
+# ---------------------------------------------------------------------------
 # dense backend — im2col oracle, differentiable (training path).
 # ---------------------------------------------------------------------------
 
-def _dense_conv(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
-    w = _effective_weight(layer_params, mask, quant_fn)
-    lif = layer_params["lif"]
-
-    def stage(x):
-        padded = pad_same(x, spec.kw)
-
-        def step(v, ifm):
-            return lif_step(v, conv1d_dense_oracle(ifm, w), lif)
-
-        v0 = jnp.zeros((spec.oc, x.shape[-1]), dtype=w.dtype)
-        _, spikes = jax.lax.scan(step, v0, padded)
-        return spikes, None
-
-    return stage
+def _dense_conv(spec: LayerSpec, layer_params, *, cfg, mask=None,
+                quant_fn=None, artifacts=None) -> LayerCell:
+    w = _weight(layer_params, mask, quant_fn, artifacts)
+    return _conv_cell(spec.kw, spec.oc, layer_params["lif"],
+                      lambda ifm: conv1d_dense_oracle(ifm, w), w.dtype)
 
 
-def _dense_fc(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
-    w = _effective_weight(layer_params, mask, quant_fn)
-    lif = layer_params["lif"]
-
-    def stage(x):
-        x = x.reshape(x.shape[0], -1)
-
-        def step(v, s):
-            cur = s.astype(w.dtype) @ w
-            v_next, out = lif_step(v, cur, lif)
-            return v_next, (out, cur)
-
-        v0 = jnp.zeros((w.shape[1],), dtype=w.dtype)
-        _, (spikes, currents) = jax.lax.scan(step, v0, x)
-        return spikes, currents
-
-    return stage
+def _dense_fc(spec: LayerSpec, layer_params, *, cfg, mask=None,
+              quant_fn=None, artifacts=None) -> LayerCell:
+    w = _weight(layer_params, mask, quant_fn, artifacts)
+    return _fc_cell(w, layer_params["lif"])
 
 
 register_backend("dense", KIND_CONV, _dense_conv)
@@ -280,26 +433,16 @@ register_backend("dense", KIND_FC, _dense_fc)
 # goap backend — COO weight-priority iteration (vectorized Algorithm 1).
 # ---------------------------------------------------------------------------
 
-def _goap_conv(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
-    coo = _layer_coo(spec, layer_params, mask, quant_fn)
-    lif = layer_params["lif"]
-
-    def stage(x):
-        padded = pad_same(x, coo.kw)
-
-        def step(v, ifm):
-            return lif_step(v, goap_conv_nnz(ifm, coo), lif)
-
-        v0 = jnp.zeros((coo.oc, x.shape[-1]), dtype=jnp.float32)
-        _, spikes = jax.lax.scan(step, v0, padded)
-        return spikes, None
-
-    return stage
+def _goap_conv(spec: LayerSpec, layer_params, *, cfg, mask=None,
+               quant_fn=None, artifacts=None) -> LayerCell:
+    coo = _layer_coo(spec, layer_params, mask, quant_fn, artifacts)
+    return _conv_cell(coo.kw, coo.oc, layer_params["lif"],
+                      lambda ifm: goap_conv_nnz(ifm, coo), jnp.float32)
 
 
 register_backend("goap", KIND_CONV, _goap_conv)
 # FC layers use the weight-mask method (paper §III-B): zeros kept in the
-# matrix *are* the mask, so the dense FC stage is numerically the WM stage.
+# matrix *are* the mask, so the dense FC cell is numerically the WM cell.
 register_backend("goap", KIND_FC, _dense_fc)
 
 
@@ -311,47 +454,47 @@ PALLAS_BLOCK_OC = 8
 PALLAS_BLOCK_K = 32
 
 
-def _pallas_conv(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
-    # the Pallas path needs the dense layout to re-block; recover it from a
-    # pre-sparsified COO kernel if that is all we were given
-    if "coo" in layer_params:
-        from repro.core.sparse_format import coo_to_dense
-        w = coo_to_dense(layer_params["coo"]).astype(np.float32)
-    else:
-        w = _concrete_weight(spec, layer_params, mask, quant_fn)
-    bs = block_sparse_from_dense(w, block_oc=PALLAS_BLOCK_OC, block_k=PALLAS_BLOCK_K)
-    lif = layer_params["lif"]
+def _pallas_conv(spec: LayerSpec, layer_params, *, cfg, mask=None,
+                 quant_fn=None, artifacts=None) -> LayerCell:
+    def build_bs():
+        # the Pallas path needs the dense layout to re-block; recover it
+        # from a pre-sparsified COO kernel if that is all we were given
+        if "coo" in layer_params:
+            from repro.core.sparse_format import coo_to_dense
+            w = coo_to_dense(layer_params["coo"]).astype(np.float32)
+        else:
+            w = _concrete_weight(spec, layer_params, mask, quant_fn, artifacts)
+        return block_sparse_from_dense(
+            w, block_oc=PALLAS_BLOCK_OC, block_k=PALLAS_BLOCK_K)
+
+    bs = _artifact(artifacts, "block_sparse", build_bs)
 
     from repro.kernels.ops import goap_conv_op
 
-    def stage(x):
-        padded = pad_same(x, bs.kw)
-
-        def step(v, ifm):
-            return lif_step(v, goap_conv_op(ifm, bs), lif)
-
-        v0 = jnp.zeros((bs.oc, x.shape[-1]), dtype=jnp.float32)
-        _, spikes = jax.lax.scan(step, v0, padded)
-        return spikes, None
-
-    return stage
+    return _conv_cell(bs.kw, bs.oc, layer_params["lif"],
+                      lambda ifm: goap_conv_op(ifm, bs), jnp.float32)
 
 
-def _pallas_fc(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
-    w = jnp.asarray(_effective_weight(layer_params, mask, quant_fn))
+def _pallas_fc(spec: LayerSpec, layer_params, *, cfg, mask=None,
+               quant_fn=None, artifacts=None) -> LayerCell:
+    w = jnp.asarray(_weight(layer_params, mask, quant_fn, artifacts))
     lif = layer_params["lif"]
 
     from repro.kernels.ops import lif_op, wm_fc_op
 
-    def stage(x):
+    cell = _fc_cell(w, lif, current_fn=lambda s: wm_fc_op(s.astype(w.dtype), w))
+
+    def seq(xs):
+        # FC currents are memoryless in T: one batched (T, IN) WM matmul,
+        # then the fused LIF kernel integrates over time — one kernel
+        # launch each instead of T per-row launches
+        x = _spikes_of(xs)
         x = x.reshape(x.shape[0], -1)
-        # FC currents are memoryless in T: one batched WM matmul, then the
-        # fused LIF kernel integrates over time.
         currents = wm_fc_op(x.astype(w.dtype), w)
         spikes, _ = lif_op(currents, lif)
         return spikes, currents
 
-    return stage
+    return dataclasses.replace(cell, seq=seq)
 
 
 register_backend("pallas", KIND_CONV, _pallas_conv)
@@ -362,18 +505,32 @@ register_backend("pallas", KIND_FC, _pallas_fc)
 # stream backend — faithful Algorithm-2 emulator with Tables I/III counters.
 # ---------------------------------------------------------------------------
 
-def _stream_conv(spec: LayerSpec, layer_params, *, cfg, mask=None, quant_fn=None):
-    coo = _layer_coo(spec, layer_params, mask, quant_fn)
-    sched = build_schedule(coo)
-    lif = layer_params["lif"]
+def _stream_conv(spec: LayerSpec, layer_params, *, cfg, mask=None,
+                 quant_fn=None, artifacts=None) -> LayerCell:
+    coo = _layer_coo(spec, layer_params, mask, quant_fn, artifacts)
+    sched = _artifact(artifacts, "schedule", lambda: build_schedule(coo))
+    one_timestep = make_schedule_step(sched, layer_params["lif"], coo.oc)
+    static_counts = {
+        "reps_per_timestep": sched.reps,
+        "compute_iters": sched.n_compute,
+        "extra_iters": sched.n_extra,
+        "empty_iters": sched.n_empty,
+    }
 
-    def stage(x):
-        padded = pad_same(x, coo.kw)
-        oi = x.shape[-1]
-        spikes, _, counts = schedule_interpreter(padded, sched, lif, oi, coo.oc)
-        return spikes, counts
+    def init_state(x_t):
+        v0 = jnp.zeros((coo.oc, x_t.shape[-1]), jnp.float32)
+        return v0, jnp.float32(0.0), jnp.int32(0)
 
-    return stage
+    def step(carry, x_t):
+        v, acc, t = carry
+        v_next, (out, a) = one_timestep(v, pad_same(_spikes_of(x_t), coo.kw))
+        return (v_next, acc + a, t + 1), out
+
+    def finalize(carry):
+        _, acc, t = carry
+        return {**static_counts, "accumulations": acc, "timesteps": t}
+
+    return LayerCell(init_state=init_state, step=step, finalize=finalize)
 
 
 register_backend("stream", KIND_CONV, _stream_conv)
@@ -399,32 +556,28 @@ def stream_totals(counters: Dict[str, Dict[str, Any]]) -> Dict[str, Any]:
 
 @dataclasses.dataclass(frozen=True)
 class BoundProgram:
-    """A layer graph bound to parameters under one backend."""
+    """A layer graph bound to parameters: one cell per layer.
+
+    ``run`` executes layer by layer (every cell scanned over T in turn);
+    the fused single-scan alternative over the same cells lives in
+    :func:`repro.plan.streaming.run_streaming`.
+    """
 
     backend: str
-    stages: Tuple[Tuple[LayerSpec, Callable], ...]
+    stages: Tuple[Tuple[LayerSpec, LayerCell], ...]
 
     def run(self, frames: jax.Array) -> Tuple[jax.Array, Dict[str, Dict]]:
         """(T, IC0, W) frames -> (logits, per-conv-layer counters)."""
         x = frames
-        fc_out = None
         logits = None
         counters: Dict[str, Dict] = {}
-        for spec, stage in self.stages:
-            if spec.kind == KIND_CONV:
-                x, aux = stage(x)
-                if aux is not None:
-                    counters[spec.name] = aux
-            elif spec.kind == KIND_POOL:
-                x = stage(x)
-            elif spec.kind == KIND_FC:
-                spikes, currents = stage(x)
-                fc_out = (spikes, currents)
-                x = spikes
-            elif spec.kind == KIND_READOUT:
-                logits = stage(fc_out)
-            else:  # pragma: no cover - specs are built internally
-                raise ValueError(f"unknown layer kind {spec.kind!r}")
+        for spec, cell in self.stages:
+            ys, _, aux = run_cell(cell, x)
+            if spec.kind == KIND_READOUT:
+                logits = aux
+            elif aux is not None:
+                counters[spec.name] = aux
+            x = ys
         return (logits if logits is not None else x), counters
 
     def __call__(self, frames: jax.Array) -> jax.Array:
@@ -433,6 +586,14 @@ class BoundProgram:
     def batch(self, frames_b: jax.Array) -> jax.Array:
         """(B, T, IC0, W) -> (B, n_classes)."""
         return jax.vmap(lambda f: self.run(f)[0])(frames_b)
+
+
+def _contains_tracer(*trees) -> bool:
+    return any(
+        isinstance(leaf, jax.core.Tracer)
+        for tree in trees
+        for leaf in jax.tree_util.tree_leaves(tree)
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -448,16 +609,57 @@ class SNNProgram:
 
     # -- binding / execution ------------------------------------------------
 
-    def bind(self, params, backend: str = "dense", *, masks=None,
-             quant_fn=None, layers: Optional[Sequence[LayerSpec]] = None) -> BoundProgram:
-        """Resolve every layer against ``backend`` and close over params."""
+    def _bind(self, params, backend: str = "dense", *, masks=None,
+              quant_fn=None, layers: Optional[Sequence[LayerSpec]] = None) -> BoundProgram:
+        """Resolve every layer against ``backend`` and close over params.
+
+        This is the raw (uncached) binding primitive: artifacts are derived
+        from scratch on every call.  Traceable (dense) binds belong here;
+        concrete-weight callers should go through
+        :func:`repro.plan.compile_plan` instead.
+        """
+        specs = self.layers if layers is None else tuple(layers)
+        validate_unique_names(specs)
         stages = []
-        for spec in (self.layers if layers is None else tuple(layers)):
+        for spec in specs:
             factory = get_backend(backend, spec.kind)
             lp, m = self._layer_params(spec, params, masks)
             stages.append((spec, factory(spec, lp, cfg=self.cfg, mask=m,
                                          quant_fn=quant_fn)))
         return BoundProgram(backend=backend, stages=tuple(stages))
+
+    def bind(self, params, backend: str = "dense", *, masks=None,
+             quant_fn=None, layers: Optional[Sequence[LayerSpec]] = None) -> BoundProgram:
+        """Deprecated: use :func:`repro.plan.compile_plan` (cached
+        artifacts, per-layer assignment, fused streaming executor) for
+        concrete weights, or :meth:`apply`/:meth:`apply_batch` for traced
+        execution."""
+        warnings.warn(
+            "SNNProgram.bind is deprecated; use repro.plan.compile_plan "
+            "(cached ExecutionPlans, per-layer backend assignment, fused "
+            "streaming) or SNNProgram.apply for traced execution",
+            DeprecationWarning, stacklevel=2)
+        return self._bind(params, backend, masks=masks, quant_fn=quant_fn,
+                          layers=layers)
+
+    def _cached_plan(self, params, backend, masks, quant_fn):
+        """A cached ExecutionPlan for concrete params, else None.
+
+        Repeated ``apply`` calls on unchanged weights (trainer eval loops,
+        notebook sessions) hit the content-addressed plan cache instead of
+        re-deriving COO kernels and schedules.  Traced params (under
+        jit/vmap/grad) cannot be hashed and fall back to a direct bind.
+        """
+        if _contains_tracer(params, masks):
+            return None
+        try:
+            from repro.plan import compile_plan
+
+            return compile_plan(self, params, masks=masks, quant_fn=quant_fn,
+                                assignment=backend)
+        except jax.errors.TracerArrayConversionError:
+            # concrete params but a quant_fn closing over traced scales
+            return None
 
     def apply(self, params, frames: jax.Array, backend: str = "dense", *,
               masks=None, quant_fn=None, return_counters: bool = False):
@@ -468,21 +670,28 @@ class SNNProgram:
         compute/extra/empty reps and gated accumulation counts of paper
         Tables I/III; empty for the other backends).
         """
-        bound = self.bind(params, backend, masks=masks, quant_fn=quant_fn)
-        logits, counters = bound.run(frames)
+        plan = self._cached_plan(params, backend, masks, quant_fn)
+        if plan is not None:
+            logits, counters = plan.run_layered(frames)
+        else:
+            logits, counters = self._bind(
+                params, backend, masks=masks, quant_fn=quant_fn).run(frames)
         return (logits, counters) if return_counters else logits
 
     def apply_batch(self, params, frames_b: jax.Array, backend: str = "dense",
                     *, masks=None, quant_fn=None) -> jax.Array:
         """(B, T, IC0, W) -> (B, n_classes)."""
-        return self.bind(params, backend, masks=masks,
-                         quant_fn=quant_fn).batch(frames_b)
+        plan = self._cached_plan(params, backend, masks, quant_fn)
+        if plan is not None:
+            return plan.bound.batch(frames_b)
+        return self._bind(params, backend, masks=masks,
+                          quant_fn=quant_fn).batch(frames_b)
 
     def run_layers(self, layers: Sequence[LayerSpec], params, x: jax.Array,
                    backend: str = "dense", *, masks=None, quant_fn=None):
         """Execute a contiguous slice of the graph (pipeline stages)."""
-        return self.bind(params, backend, masks=masks, quant_fn=quant_fn,
-                         layers=layers).run(x)[0]
+        return self._bind(params, backend, masks=masks, quant_fn=quant_fn,
+                          layers=layers).run(x)[0]
 
     # -- graph slicing (pipeline-parallel stage construction) ---------------
 

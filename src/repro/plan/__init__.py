@@ -1,0 +1,40 @@
+"""Precomputed execution plans (paper §III-C.4 made structural).
+
+The accelerator's defining trick is that *everything derivable from the
+fixed kernels is derived offline*: COO layouts, iteration schedules,
+empty/extra slots — the streaming pipeline executes with zero dynamic
+control flow.  This package is the software analogue:
+
+* :func:`compile_plan` precomputes every layer's bind-time artifacts (COO
+  kernels, Algorithm-2 schedules, block-sparse tilings, cost-model priors)
+  once into an immutable :class:`ExecutionPlan`, content-hashed on
+  (config, weight bytes, mask bytes) with an on-disk cache so repeated
+  binds — trainer eval loops, serve-engine restarts — are near-free;
+* :func:`run_streaming` threads **all** layers' membrane states through a
+  single ``lax.scan`` over timesteps (the jax analogue of the paper's
+  fused inter-layer pipeline), numerically equal to the layer-by-layer
+  path for every backend;
+* plans support heterogeneous per-layer backend ``assignment`` maps
+  (e.g. ``{"conv1": "pallas", "fc1": "dense"}``), which the serving
+  tier's per-layer autotuner produces.
+"""
+from repro.plan.cache import PlanCache, default_cache, set_default_cache
+from repro.plan.compile import (
+    ExecutionPlan,
+    LayerPlan,
+    artifact_build_count,
+    compile_plan,
+)
+from repro.plan.streaming import init_stream_states, run_streaming
+
+__all__ = [
+    "PlanCache",
+    "default_cache",
+    "set_default_cache",
+    "ExecutionPlan",
+    "LayerPlan",
+    "artifact_build_count",
+    "compile_plan",
+    "init_stream_states",
+    "run_streaming",
+]

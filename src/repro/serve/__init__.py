@@ -1,6 +1,12 @@
 """Serving tier: micro-batched streaming AMC inference engines."""
 
-from .autotune import AutotuneReport, autotune_backend, default_candidates
+from .autotune import (
+    AutotuneReport,
+    PerLayerAutotuneReport,
+    autotune_backend,
+    autotune_per_layer,
+    default_candidates,
+)
 from .batcher import MicroBatch, MicroBatcher, Request, ServeFuture
 from .engine import AMCServeEngine, AsyncAMCServeEngine, ServeStats
 
@@ -13,6 +19,8 @@ __all__ = [
     "Request",
     "ServeFuture",
     "AutotuneReport",
+    "PerLayerAutotuneReport",
     "autotune_backend",
+    "autotune_per_layer",
     "default_candidates",
 ]

@@ -16,6 +16,14 @@ frames is sigma-delta encoded and classified through the unified
   autotuner picks the fastest backend for the serving batch shape at bind
   time (``backend="auto"``).
 
+Both engines bind through :func:`repro.plan.compile_plan`, so COO kernels
+and schedules come from the content-addressed plan cache — an engine
+restart on unchanged weights rebuilds nothing (the software form of the
+paper's offline precomputation).  The async tier additionally supports
+``backend="per-layer"``: a layer-by-layer backend race whose winning
+heterogeneous assignment is served through the fused single-scan
+streaming executor.
+
 Both engines report the cost-model counters (accumulations, fetched bits)
 that the power model consumes, which backend served each batch, and —
 new in the async tier era — per-request latency percentiles, sampled
@@ -40,7 +48,13 @@ from repro.core.sparse_format import weight_mask_from_dense
 from repro.data.pipeline import sigma_delta_encode_batch, sigma_delta_encode_np
 from repro.models.graph import compile_snn
 from repro.models.snn import SNNConfig, sparsify_params
-from repro.serve.autotune import AutotuneReport, autotune_backend
+from repro.plan import compile_plan
+from repro.serve.autotune import (
+    AutotuneReport,
+    PerLayerAutotuneReport,
+    autotune_backend,
+    autotune_per_layer,
+)
 from repro.serve.batcher import MicroBatcher
 
 __all__ = ["AMCServeEngine", "AsyncAMCServeEngine", "ServeStats"]
@@ -199,8 +213,12 @@ class AMCServeEngine:
         # COO form only feeds the activity-counting hooks
         self.sparse = sparsify_params(params, masks) if count_activity else None
         self.stats = ServeStats(backend=backend)
-        bound = self.program.bind(params, backend, masks=masks)
-        self._fwd = jax.jit(bound.batch)
+        # precompiled plan: COO/schedule artifacts come from the content-
+        # addressed cache, so engine restarts on unchanged weights rebuild
+        # nothing (the software form of the paper's offline precomputation)
+        self.plan = compile_plan(self.program, params, masks=masks,
+                                 assignment=backend)
+        self._fwd = jax.jit(self.plan.bound.batch)
 
     def classify(self, iq: np.ndarray) -> np.ndarray:
         """iq: (N, 2, L) -> predicted class ids (N,). Batches internally."""
@@ -246,10 +264,13 @@ class AsyncAMCServeEngine:
 
     ``backend="auto"`` races the platform's candidate backends on the
     largest bucket shape and pins the winner (``engine.autotune`` keeps the
-    full report).  With more than one local device (or an explicit
-    ``mesh``) every batch is fanned across the mesh's ``data`` axis via
-    ``shard_map``; bucket sizes are forced to multiples of the device
-    count so the split is always even.
+    full report).  ``backend="per-layer"`` races them **layer by layer**
+    (plan cost priors order each race; ``engine.perlayer`` keeps the
+    report) and serves the winning heterogeneous assignment through the
+    fused single-scan streaming executor (``engine.plan``).  With more
+    than one local device (or an explicit ``mesh``) every batch is fanned
+    across the mesh's ``data`` axis via ``shard_map``; bucket sizes are
+    forced to multiples of the device count so the split is always even.
     """
 
     def __init__(
@@ -287,8 +308,21 @@ class AsyncAMCServeEngine:
             max_delay_ms=max_delay_ms, buckets=buckets, align=align)
 
         self.autotune: Optional[AutotuneReport] = None
+        self.perlayer: Optional[PerLayerAutotuneReport] = None
+        self.plan = None
+        self.assignment: Optional[Dict[str, str]] = None
         raced_steps: Dict[str, object] = {}
-        if backend == "auto":
+        if backend == "per-layer":
+            # race the candidates layer by layer (plan cost priors order the
+            # race) and serve the winning heterogeneous assignment through
+            # the fused single-scan streaming executor
+            self.perlayer = autotune_per_layer(
+                self.program, params, self.batcher.max_batch, masks=masks,
+                candidates=candidates, reps=autotune_reps)
+            self.assignment = dict(self.perlayer.assignment)
+            self.plan = compile_plan(self.program, params, masks=masks,
+                                     assignment=self.assignment)
+        elif backend == "auto":
             probe_shape = (self.batcher.max_batch, ic0, cfg.input_width)
 
             def make_fn(bound):  # memoize so the winner's compile is reused
@@ -302,8 +336,14 @@ class AsyncAMCServeEngine:
             backend = self.autotune.choice
         self.backend = backend
         self.stats = ServeStats(backend=backend)
-        self._step = raced_steps.get(backend) or self._wrap_bound(
-            self.program.bind(params, backend, masks=masks))
+        if self.plan is not None:           # per-layer: fused streaming step
+            self._step = self._wrap_batch_fn(self.plan.batch)
+        elif backend in raced_steps:        # reuse the race winner's compile
+            self._step = raced_steps[backend]
+        else:                               # fixed backend: cached plan bind
+            self.plan = compile_plan(self.program, params, masks=masks,
+                                     assignment=backend)
+            self._step = self._wrap_batch_fn(self.plan.bound.batch)
 
         if warmup:  # pre-compile every bucket shape so serving never stalls
             for b in self.batcher.buckets:
@@ -323,18 +363,26 @@ class AsyncAMCServeEngine:
 
     # -- compiled step ------------------------------------------------------
 
-    def _wrap_bound(self, bound):
-        """Fuse Σ-Δ encode + bound forward (+ shard_map) under one jit."""
+    def _wrap_batch_fn(self, batch_fn):
+        """Fuse Σ-Δ encode + forward (+ shard_map) under one jit.
+
+        ``batch_fn``: (B, T, IC, L) spike frames -> (B, n_classes) logits —
+        a bound program's layer-by-layer ``batch`` or an ExecutionPlan's
+        fused streaming ``batch``.
+        """
         osr = self.cfg.timesteps
 
         def step(iq):  # (B, IC, L) raw I/Q -> (B, n_classes) logits
-            return bound.batch(sigma_delta_encode_batch(iq, osr))
+            return batch_fn(sigma_delta_encode_batch(iq, osr))
 
         if self.mesh is not None:
             from repro.distributed.sharding import shard_serve_fn
 
             step = shard_serve_fn(step, self.mesh)
         return jax.jit(step)
+
+    def _wrap_bound(self, bound):
+        return self._wrap_batch_fn(bound.batch)
 
     # -- worker loop --------------------------------------------------------
 

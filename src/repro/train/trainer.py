@@ -65,22 +65,23 @@ def _loss_fn(params, lsq_scales, frames, labels, cfg: SNNConfig, masks, use_lsq,
     # surrogate-gradient LIF, pure-jax bind -> traceable under jit/grad)
     program = compile_snn(cfg)
 
-    def fwd_one(f):
-        if use_lsq:
-            # per-layer scales are threaded by closure index through the
-            # forward's quant_fn; scales is a flat list in layer order
-            idx = {"i": 0}
-            flat_scales = lsq_scales["conv"] + lsq_scales["fc"]
+    quant_fn = None
+    if use_lsq:
+        # per-layer scales are threaded by closure index through the
+        # forward's quant_fn; scales is a flat list in layer order
+        idx = {"i": 0}
+        flat_scales = lsq_scales["conv"] + lsq_scales["fc"]
 
-            def quant_fn(w):
-                s = flat_scales[idx["i"]]
-                idx["i"] += 1
-                return lsq_fake_quant(w, s, bits)
+        def quant_fn(w):
+            s = flat_scales[idx["i"]]
+            idx["i"] += 1
+            return lsq_fake_quant(w, s, bits)
 
-            return program.apply(params, f, "dense", masks=masks, quant_fn=quant_fn)
-        return program.apply(params, f, "dense", masks=masks)
-
-    logits = jax.vmap(fwd_one)(frames)
+    # bind ONCE per trace, then vmap the bound cells over the batch — the
+    # factory chain (masking, quantization, cell construction) must not
+    # re-run per sample inside the vmap
+    bound = program._bind(params, "dense", masks=masks, quant_fn=quant_fn)
+    logits = jax.vmap(bound)(frames)
     logp = jax.nn.log_softmax(logits)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
     acc = (logits.argmax(-1) == labels).mean()
@@ -104,6 +105,11 @@ class SNNTrainer:
         self.stragglers: List[int] = []
         self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep_ckpts) if cfg.ckpt_dir else None
         self._jit_step = jax.jit(self._train_step, static_argnames=("use_masks",))
+        # one persistent jitted eval forward: rebuilding it per evaluate()
+        # call would retrace (and rebind) every time
+        program = compile_snn(model_cfg)
+        self._eval_fwd = jax.jit(
+            lambda p, f, m: program.apply_batch(p, f, "dense", masks=m))
 
     # -- core step ----------------------------------------------------------
 
@@ -251,10 +257,4 @@ class SNNTrainer:
 
     def _eval_logits(self, frames, use_masks):
         masks = self.masks if use_masks else None
-        program = compile_snn(self.model_cfg)
-
-        @jax.jit
-        def fwd(params, frames, masks):
-            return program.apply_batch(params, frames, "dense", masks=masks)
-
-        return fwd(self.params, frames, masks)
+        return self._eval_fwd(self.params, frames, masks)

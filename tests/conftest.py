@@ -14,6 +14,24 @@ if settings is not None:
     settings.load_profile("ci")
 
 
+@pytest.fixture(autouse=True, scope="session")
+def _isolated_plan_cache():
+    """Run the whole suite against a memory-only plan cache.
+
+    The default cache's disk tier (~/.cache/repro/plans) must never leak
+    into tests: stale pickled artifacts under an unchanged content hash
+    would mask regressions in the artifact builders (the golden-counter
+    tests are fully deterministic), and test runs must not write into the
+    user's real cache directory.
+    """
+    from repro.plan import PlanCache, default_cache, set_default_cache
+
+    old = default_cache()
+    set_default_cache(PlanCache(disk_dir=""))
+    yield
+    set_default_cache(old)
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,384 @@
+"""Plan compiler, fused streaming executor, and per-layer assignment.
+
+The acceptance surface of the plan subsystem:
+
+* the fused single-scan executor produces logits equal to the
+  layer-by-layer path (atol <= 1e-5) for **all four** backends on seeded
+  random configs — the paper's inter-layer pipeline fusion is exact;
+* a second ``compile_plan`` on unchanged weights is a cache hit (no
+  COO/schedule rebuild, asserted via the artifact build counter), plans
+  survive a simulated process restart through the on-disk tier, and a
+  mask change invalidates;
+* heterogeneous per-layer backend assignments execute equivalently;
+* ``SNNProgram.apply`` on concrete weights routes through the plan cache
+  (the trainer-hot-loop fix: artifacts built once per weight update);
+* duplicate layer names are rejected instead of silently merging their
+  Tables I/III counters.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import (
+    SNNConfig,
+    SNNProgram,
+    compile_plan,
+    compile_snn,
+    init_snn,
+    run_streaming,
+)
+from repro.models.graph import Conv1dLIF, FCLIF, MaxPool, Readout, artifact_build_count
+from repro.plan import PlanCache, default_cache, set_default_cache
+from repro.serve import AsyncAMCServeEngine, autotune_per_layer
+from repro.train.pruning import make_mask_pytree
+from test_backend_properties import random_config
+
+ALL_BACKENDS = ("dense", "goap", "pallas", "stream")
+N_FUSION_CONFIGS = 10
+ATOL = 1e-5
+
+CFG = SNNConfig(
+    conv_specs=((3, 2, 4), (3, 4, 8)),
+    pool=2,
+    fc_specs=((32, 16), (16, 5)),
+    input_width=16,
+    timesteps=3,
+    n_classes=5,
+)
+
+
+def _mem_cache() -> PlanCache:
+    """A fresh memory-only cache (no cross-test disk contamination)."""
+    return PlanCache(disk_dir="")
+
+
+@pytest.fixture
+def fresh_default_cache():
+    """Swap the process-default plan cache for an isolated memory one."""
+    old = default_cache()
+    fresh = _mem_cache()
+    set_default_cache(fresh)
+    yield fresh
+    set_default_cache(old)
+
+
+def _frames(cfg: SNNConfig, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        (rng.random((cfg.timesteps, cfg.conv_specs[0][1], cfg.input_width))
+         < 0.5).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    program = compile_snn(CFG)
+    params = init_snn(jax.random.PRNGKey(0), CFG)
+    masks = make_mask_pytree(params, 0.5)
+    return program, params, masks
+
+
+# ---------------------------------------------------------------------------
+# fused single-scan executor == layer-by-layer path, all backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(N_FUSION_CONFIGS))
+def test_fused_scan_matches_layered_path_random_configs(seed):
+    rng = np.random.default_rng(2000 + seed)
+    cfg = random_config(rng)
+    program = compile_snn(cfg)
+    params = init_snn(jax.random.PRNGKey(seed), cfg)
+    density = float(rng.uniform(0.2, 1.0))
+    masks = None if density >= 1.0 else make_mask_pytree(params, density)
+    frames = _frames(cfg, seed=seed)
+    cache = _mem_cache()
+    ref = np.asarray(program.apply(params, frames, "dense", masks=masks))
+    for backend in ALL_BACKENDS:
+        plan = compile_plan(program, params, masks=masks,
+                            assignment=backend, cache=cache)
+        layered, c_layered = plan.run_layered(frames)
+        fused, c_fused = plan.run_streaming(frames)
+        np.testing.assert_allclose(
+            np.asarray(fused), np.asarray(layered), atol=ATOL,
+            err_msg=f"fused != layered for {backend!r} on cfg={cfg}")
+        np.testing.assert_allclose(
+            np.asarray(fused), ref, atol=ATOL,
+            err_msg=f"fused diverged from dense oracle for {backend!r}")
+        # the module-level entry point is the method's implementation
+        fused2, _ = run_streaming(plan, frames)
+        np.testing.assert_array_equal(np.asarray(fused2), np.asarray(fused))
+        if backend == "stream":  # identical counters through both executors
+            assert set(c_fused) == set(c_layered) and c_fused
+            for name in c_fused:
+                for key in c_layered[name]:
+                    assert (int(np.asarray(c_fused[name][key]))
+                            == int(np.asarray(c_layered[name][key])))
+
+
+def test_fused_batch_matches_apply_batch(setup):
+    program, params, masks = setup
+    frames_b = jnp.stack([_frames(CFG, seed=s) for s in range(3)])
+    ref = program.apply_batch(params, frames_b, "dense", masks=masks)
+    plan = compile_plan(program, params, masks=masks, assignment="goap",
+                        cache=_mem_cache())
+    np.testing.assert_allclose(np.asarray(plan.batch(frames_b)),
+                               np.asarray(ref), atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# plan cache: hit on unchanged weights, disk round-trip, mask invalidation
+# ---------------------------------------------------------------------------
+
+def test_second_compile_is_cache_hit_no_artifact_rebuild(setup):
+    program, params, masks = setup
+    cache = _mem_cache()
+    plan1 = compile_plan(program, params, masks=masks, assignment="stream",
+                         cache=cache)
+    built = artifact_build_count()
+    plan2 = compile_plan(program, params, masks=masks, assignment="stream",
+                         cache=cache)
+    assert plan2 is plan1                       # memory hit: same object
+    assert artifact_build_count() == built      # no COO/schedule rebuild
+    # a different backend over the same weights reuses the shared COO
+    compile_plan(program, params, masks=masks, assignment="goap", cache=cache)
+    assert artifact_build_count() == built
+
+
+def test_plan_cache_disk_roundtrip(tmp_path, setup):
+    program, params, masks = setup
+    frames = _frames(CFG)
+    cold = PlanCache(str(tmp_path))
+    plan1 = compile_plan(program, params, masks=masks, assignment="stream",
+                         cache=cold)
+    built = artifact_build_count()
+    logits1, counters1 = plan1.run_streaming(frames)
+    # fresh cache over the same directory = simulated process restart
+    warm = PlanCache(str(tmp_path))
+    plan2 = compile_plan(program, params, masks=masks, assignment="stream",
+                         cache=warm)
+    assert artifact_build_count() == built      # artifacts loaded, not rebuilt
+    assert warm.stats["layer_disk_hits"] > 0
+    assert plan2.digest == plan1.digest
+    logits2, counters2 = plan2.run_streaming(frames)
+    np.testing.assert_array_equal(np.asarray(logits1), np.asarray(logits2))
+    for name in counters1:
+        assert (int(np.asarray(counters1[name]["accumulations"]))
+                == int(np.asarray(counters2[name]["accumulations"])))
+
+
+def test_mask_change_invalidates_plan(tmp_path, setup):
+    program, params, masks = setup
+    cache = PlanCache(str(tmp_path))
+    plan1 = compile_plan(program, params, masks=masks, assignment="goap",
+                         cache=cache)
+    built = artifact_build_count()
+    masks2 = make_mask_pytree(params, 0.25)
+    plan2 = compile_plan(program, params, masks=masks2, assignment="goap",
+                         cache=cache)
+    assert plan2.digest != plan1.digest
+    assert artifact_build_count() > built       # re-derived for the new mask
+    frames = _frames(CFG)
+    ref = program.apply(params, frames, "dense", masks=masks2)
+    np.testing.assert_allclose(np.asarray(plan2.run_streaming(frames)[0]),
+                               np.asarray(ref), atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous per-layer assignment
+# ---------------------------------------------------------------------------
+
+def test_heterogeneous_assignment_equivalence(setup):
+    program, params, masks = setup
+    frames = _frames(CFG)
+    ref = np.asarray(program.apply(params, frames, "dense", masks=masks))
+    plan = compile_plan(
+        program, params, masks=masks,
+        assignment={"conv1": "pallas", "conv2": "goap", "fc1": "dense"},
+        default_backend="goap", cache=_mem_cache())
+    assert plan.assignment == {"conv1": "pallas", "conv2": "goap",
+                               "fc1": "dense", "fc2": "goap"}
+    np.testing.assert_allclose(np.asarray(plan.run_streaming(frames)[0]),
+                               ref, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(plan.run_layered(frames)[0]),
+                               ref, atol=ATOL)
+    # cost priors exist for every weighted layer (the autotuner's input)
+    priors = plan.cost_priors()
+    assert set(priors) == {"conv1", "conv2", "fc1", "fc2"}
+    assert all({"dense", "goap"} <= set(p) for p in priors.values())
+
+
+def test_assignment_validation(setup):
+    program, params, masks = setup
+    with pytest.raises(ValueError, match="unknown backend 'warp'"):
+        compile_plan(program, params, masks=masks, assignment="warp",
+                     cache=_mem_cache())
+    with pytest.raises(ValueError, match="unknown layers"):
+        compile_plan(program, params, masks=masks,
+                     assignment={"conv9": "dense"}, cache=_mem_cache())
+    with pytest.raises(ValueError, match="non-weighted layers"):
+        compile_plan(program, params, masks=masks,
+                     assignment={"pool1": "dense"}, cache=_mem_cache())
+
+
+# ---------------------------------------------------------------------------
+# apply() routes through the plan cache (the trainer-hot-loop fix)
+# ---------------------------------------------------------------------------
+
+def test_apply_builds_artifacts_once_per_weight_update(fresh_default_cache):
+    cfg = CFG
+    program = compile_snn(cfg)
+    params = init_snn(jax.random.PRNGKey(7), cfg)
+    masks = make_mask_pytree(params, 0.5)
+    ref0 = program.apply(params, _frames(cfg, 0), "goap", masks=masks)
+    built = artifact_build_count()
+    # repeated applies on unchanged weights (eval loops): zero rebuilds
+    for seed in (1, 2, 3):
+        program.apply(params, _frames(cfg, seed), "goap", masks=masks)
+    program.apply_batch(params, _frames(cfg, 4)[None], "goap", masks=masks)
+    assert artifact_build_count() == built
+    # one weight update -> exactly one rebuild of each conv layer's COO
+    params2 = jax.tree_util.tree_map(lambda x: x, params)
+    params2["conv"][0] = dict(params2["conv"][0])
+    params2["conv"][0]["w"] = params2["conv"][0]["w"] + 0.01
+    program.apply(params2, _frames(cfg, 0), "goap", masks=masks)
+    delta = artifact_build_count() - built
+    assert delta == 1  # only conv1's COO; conv2's entry is content-shared
+    program.apply(params2, _frames(cfg, 5), "goap", masks=masks)
+    assert artifact_build_count() == built + delta
+    # traced params fall back to the direct bind (and stay differentiable)
+    g = jax.grad(lambda p: program.apply(p, _frames(cfg, 0), "dense",
+                                         masks=masks).sum())(params)
+    assert np.isfinite(sum(float(jnp.abs(x).sum())
+                           for x in jax.tree_util.tree_leaves(g)))
+    del ref0, g
+
+
+def test_sync_engine_restart_reuses_plan(fresh_default_cache):
+    from repro.serve import AMCServeEngine
+
+    params = init_snn(jax.random.PRNGKey(11), CFG)
+    masks = make_mask_pytree(params, 0.5)
+    rng = np.random.default_rng(0)
+    iq = rng.normal(size=(4, 2, CFG.input_width)).astype(np.float32)
+    e1 = AMCServeEngine(params, CFG, masks=masks, batch_size=4, backend="goap")
+    preds1 = e1.classify(iq)
+    built = artifact_build_count()
+    e2 = AMCServeEngine(params, CFG, masks=masks, batch_size=4, backend="goap")
+    assert artifact_build_count() == built      # restart: nothing rebuilt
+    assert e2.plan is e1.plan
+    np.testing.assert_array_equal(e2.classify(iq), preds1)
+
+
+# ---------------------------------------------------------------------------
+# duplicate layer names (counter-collision guard)
+# ---------------------------------------------------------------------------
+
+def test_duplicate_layer_names_rejected():
+    layers = (
+        Conv1dLIF(0, 3, 2, 4, name="dup"),
+        MaxPool(2, name="pool1"),
+        Conv1dLIF(1, 3, 4, 8, name="dup"),
+        MaxPool(2, name="pool2"),
+        FCLIF(0, 32, 16),
+        FCLIF(1, 16, 5),
+        Readout("current_sum"),
+    )
+    program = SNNProgram(cfg=CFG, layers=layers)
+    params = init_snn(jax.random.PRNGKey(0), CFG)
+    with pytest.raises(ValueError, match="duplicate layer name 'dup'"):
+        program._bind(params, "dense")
+    with pytest.raises(ValueError, match="duplicate layer name 'dup'"):
+        compile_plan(program, params, assignment="dense", cache=_mem_cache())
+
+
+def test_bind_is_a_deprecated_shim(setup):
+    program, params, masks = setup
+    with pytest.warns(DeprecationWarning, match="compile_plan"):
+        bound = program.bind(params, "dense", masks=masks)
+    frames = _frames(CFG)
+    np.testing.assert_allclose(
+        np.asarray(bound(frames)),
+        np.asarray(program.apply(params, frames, "dense", masks=masks)),
+        atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# per-layer autotune -> heterogeneous serving plan
+# ---------------------------------------------------------------------------
+
+def test_autotune_per_layer_produces_full_assignment(setup):
+    program, params, masks = setup
+    report = autotune_per_layer(program, params, 4, masks=masks,
+                                candidates=("dense", "goap"), reps=1,
+                                cache=_mem_cache())
+    weighted = {"conv1", "conv2", "fc1", "fc2"}
+    assert set(report.assignment) == weighted
+    assert all(b in ("dense", "goap") for b in report.assignment.values())
+    assert set(report.timings_ms) == weighted and not report.fell_back
+    assert report.summary()["batch"] == 4
+    # priors cover the raced candidates for each layer
+    for name in weighted:
+        assert set(report.priors[name]) <= {"dense", "goap"}
+    frames = _frames(CFG)
+    plan = compile_plan(program, params, masks=masks,
+                        assignment=report.assignment, cache=_mem_cache())
+    ref = program.apply(params, frames, "dense", masks=masks)
+    np.testing.assert_allclose(np.asarray(plan.run_streaming(frames)[0]),
+                               np.asarray(ref), atol=ATOL)
+
+
+def test_autotune_per_layer_falls_back_when_all_candidates_fail(setup):
+    from repro.api import register_backend
+    from repro.models import graph
+
+    program, params, masks = setup
+
+    def _boom(spec, layer_params, *, cfg, mask=None, quant_fn=None):
+        raise RuntimeError("no such accelerator")
+
+    snapshot = dict(graph._REGISTRY)
+    try:
+        register_backend("boom", "conv_lif", _boom)
+        register_backend("boom", "fc_lif", _boom)
+        report = autotune_per_layer(program, params, 2, masks=masks,
+                                    candidates=("boom",), reps=1,
+                                    fallback="goap", cache=_mem_cache())
+        # the failed candidate never lands in the assignment — the engine
+        # must be able to compile the returned map on this host
+        assert all(b == "goap" for b in report.assignment.values())
+        assert set(report.fell_back) == set(report.assignment)
+        assert all("boom" in e for e in report.errors.values())
+        plan = compile_plan(program, params, masks=masks,
+                            assignment=report.assignment, cache=_mem_cache())
+        frames = _frames(CFG)
+        ref = program.apply(params, frames, "dense", masks=masks)
+        np.testing.assert_allclose(np.asarray(plan.run_streaming(frames)[0]),
+                                   np.asarray(ref), atol=ATOL)
+    finally:
+        graph._REGISTRY.clear()
+        graph._REGISTRY.update(snapshot)
+
+
+def test_async_engine_per_layer_backend(setup):
+    program, params, masks = setup
+    rng = np.random.default_rng(3)
+    iq = rng.normal(size=(6, 2, CFG.input_width)).astype(np.float32)
+    from repro.data.pipeline import sigma_delta_encode_np
+
+    frames = jnp.asarray(sigma_delta_encode_np(iq, CFG.timesteps))
+    ref = np.asarray(program.apply_batch(params, frames, "dense",
+                                         masks=masks)).argmax(-1)
+    with AsyncAMCServeEngine(params, CFG, masks=masks, backend="per-layer",
+                             candidates=("dense", "goap"), max_batch=4,
+                             max_delay_ms=5.0, warmup=False,
+                             autotune_reps=1) as engine:
+        assert engine.backend == "per-layer"
+        assert engine.perlayer is not None and engine.plan is not None
+        assert set(engine.assignment) == {"conv1", "conv2", "fc1", "fc2"}
+        assert engine.plan.assignment == engine.assignment
+        preds = engine.classify(iq)
+        st = engine.stats
+    np.testing.assert_array_equal(preds, ref)
+    assert st.backend == "per-layer"
+    assert st.backend_batch_counts().get("per-layer", 0) == st.batches

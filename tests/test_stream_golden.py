@@ -40,7 +40,7 @@ GOLDEN_TOTALS = {"compute_iters": 8112, "extra_iters": 0, "empty_iters": 1,
                  "reps_per_timestep": 8113, "accumulations": 789930}
 
 
-def _run():
+def _setup():
     program = compile_snn(CONFIG)
     params = init_snn(jax.random.PRNGKey(0), CONFIG)
     masks = make_mask_pytree(params, DENSITY)
@@ -48,17 +48,21 @@ def _run():
     frames = jnp.asarray(
         (rng.random((CONFIG.timesteps, CONFIG.conv_specs[0][1],
                      CONFIG.input_width)) < 0.5).astype(np.float32))
+    return program, params, masks, frames
+
+
+def _run():
+    program, params, masks, frames = _setup()
     _, counters = program.apply(params, frames, "stream", masks=masks,
                                 return_counters=True)
     return counters
 
 
-def test_stream_counters_match_golden_paper_config():
-    counters = _run()
+def _assert_golden(counters):
     assert set(counters) == set(GOLDEN_LAYERS)
     for name, golden in GOLDEN_LAYERS.items():
         got = counters[name]
-        assert got["timesteps"] == CONFIG.timesteps
+        assert int(np.asarray(got["timesteps"])) == CONFIG.timesteps
         for key, want in golden.items():
             assert int(np.asarray(got[key])) == want, (
                 f"{name}.{key}: got {int(np.asarray(got[key]))}, "
@@ -70,6 +74,23 @@ def test_stream_counters_match_golden_paper_config():
     assert (GOLDEN_TOTALS["compute_iters"] + GOLDEN_TOTALS["extra_iters"]
             + GOLDEN_TOTALS["empty_iters"]
             == GOLDEN_TOTALS["reps_per_timestep"])
+
+
+def test_stream_counters_match_golden_paper_config():
+    _assert_golden(_run())
+
+
+def test_stream_counters_match_golden_through_fused_plan():
+    """The fused single-scan executor must reproduce the exact same
+    Tables I/III counters as the layer-by-layer path."""
+    from repro.api import compile_plan
+    from repro.plan import PlanCache
+
+    program, params, masks, frames = _setup()
+    plan = compile_plan(program, params, masks=masks, assignment="stream",
+                        cache=PlanCache(disk_dir=""))
+    _, counters = plan.run_streaming(frames)
+    _assert_golden(counters)
 
 
 if __name__ == "__main__":  # regeneration helper
