@@ -1,0 +1,177 @@
+"""Deployment benchmark: hot-swap latency + p99 impact under sustained load.
+
+Publishes two versions of the paper model into a throwaway
+:class:`ModelRegistry` (warming the plan cache the way a real deploy
+pipeline would), serves version 1 through the async tier under sustained
+closed-loop load, hot-swaps to version 2 mid-stream, and records what the
+lifecycle subsystem promises:
+
+* **zero dropped/failed requests** across the swap (every future must
+  resolve — a single failure fails the bench);
+* **swap latency** — off-thread bind (plan compile + per-bucket warmup)
+  vs the atomic flip + drain of the pre-flip backlog;
+* **bounded p99 impact** — request p99 before / during / after the swap
+  window, plus how many requests were in flight while it happened.
+
+Run:  PYTHONPATH=src python benchmarks/deploy_bench.py [--smoke] [--out p]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+import jax
+
+from repro.api import init_snn
+from repro.configs.saocds_amc import CONFIG as CFG
+from repro.deploy import ModelRegistry, hot_swap_from_registry
+from repro.serve import AsyncAMCServeEngine
+from repro.train.pruning import make_mask_pytree
+
+NAME = "deploy_bench"
+
+DENSITY = 0.5
+MAX_BATCH = 64
+MAX_DELAY_MS = 2.0
+
+
+def _p99_ms(lat_s) -> float:
+    return float(np.percentile(lat_s, 99.0)) * 1e3 if len(lat_s) else 0.0
+
+
+def run(load_s: float = 2.0, pumpers: int = 4) -> dict:
+    p1 = init_snn(jax.random.PRNGKey(0), CFG)
+    m1 = make_mask_pytree(p1, DENSITY)
+    p2 = init_snn(jax.random.PRNGKey(1), CFG)
+    m2 = make_mask_pytree(p2, DENSITY)
+
+    with tempfile.TemporaryDirectory() as root:
+        registry = ModelRegistry(root)
+        t0 = time.perf_counter()
+        registry.publish("amc", p1, CFG, masks=m1, alias="production")
+        registry.publish("amc", p2, CFG, masks=m2, alias="staging")
+        publish_s = time.perf_counter() - t0
+
+        loaded = registry.load("amc@production")
+        engine = AsyncAMCServeEngine(
+            loaded.params, CFG, masks=loaded.masks, backend="auto",
+            max_batch=MAX_BATCH, max_delay_ms=MAX_DELAY_MS,
+            version_label="amc@1")
+
+        records = []          # (t_done, latency_s) per completed request
+        failures = [0]
+        stop = threading.Event()
+        lock = threading.Lock()
+
+        def pump(seed: int) -> None:
+            rng = np.random.default_rng(seed)
+            while not stop.is_set():
+                iq = rng.normal(size=(2, CFG.input_width)).astype(np.float32)
+                t_sub = time.perf_counter()
+                try:
+                    engine.submit(iq).result(timeout=60.0)
+                except Exception:  # noqa: BLE001 — any failure is the story
+                    with lock:
+                        failures[0] += 1
+                    continue
+                t_done = time.perf_counter()
+                with lock:
+                    records.append((t_done, t_done - t_sub))
+
+        threads = [threading.Thread(target=pump, args=(i,), daemon=True)
+                   for i in range(pumpers)]
+        for t in threads:
+            t.start()
+
+        time.sleep(load_s)                      # steady state on v1
+        t_sw0 = time.perf_counter()
+        report = hot_swap_from_registry(engine, registry, "amc@staging",
+                                        backend=engine.backend)
+        t_sw1 = time.perf_counter()
+        time.sleep(load_s)                      # steady state on v2
+
+        stop.set()
+        for t in threads:
+            t.join(timeout=30.0)
+        stats = {k: v.summary() for k, v in engine.version_stats().items()}
+        engine.close()
+
+    before = [l for t, l in records if t < t_sw0]
+    during = [l for t, l in records if t_sw0 <= t <= t_sw1]
+    after = [l for t, l in records if t > t_sw1]
+    p99_before, p99_after = _p99_ms(before), _p99_ms(after)
+    return {
+        "jax_backend": jax.default_backend(),
+        "density": DENSITY,
+        "max_batch": MAX_BATCH,
+        "max_delay_ms": MAX_DELAY_MS,
+        "pumpers": pumpers,
+        "load_s_per_phase": load_s,
+        "registry_publish_s": publish_s,
+        "swap": report.summary(),
+        "swap_window_s": t_sw1 - t_sw0,
+        "requests": {"before": len(before), "during": len(during),
+                     "after": len(after), "total": len(records)},
+        "failed_requests": failures[0],
+        "p99_ms": {"before": p99_before, "during": _p99_ms(during),
+                   "after": p99_after},
+        "p99_after_over_before": (p99_after / p99_before
+                                  if p99_before else 0.0),
+        "version_stats": stats,
+    }
+
+
+def format_table(res: dict) -> str:
+    sw, p99, req = res["swap"], res["p99_ms"], res["requests"]
+    lines = [
+        f"Deploy bench: hot-swap under load ({res['pumpers']} closed-loop "
+        f"pumpers, {res['load_s_per_phase']}s/phase, "
+        f"{res['jax_backend']} backend)",
+        f"  publish x2 (plan warmed): {res['registry_publish_s']:.2f}s",
+        f"  swap {sw['old_label']} -> {sw['new_label']}: bind "
+        f"{sw['bind_s']:.2f}s (off hot path), flip+drain "
+        f"{sw['flip_s'] * 1e3:.1f}ms, {sw['queued_at_flip']} queued at "
+        f"flip, drained={sw['drained']}",
+        f"  requests: {req['total']} total, {req['during']} completed "
+        f"inside the swap window, {res['failed_requests']} failed",
+        f"  p99: before {p99['before']:.1f}ms  during "
+        f"{p99['during']:.1f}ms  after {p99['after']:.1f}ms "
+        f"(after/before {res['p99_after_over_before']:.2f}x)",
+    ]
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short phases for CI smoke runs")
+    ap.add_argument("--load-s", type=float, default=None)
+    ap.add_argument("--pumpers", type=int, default=4)
+    ap.add_argument("--out", default="BENCH_deploy.json")
+    args = ap.parse_args(argv)
+
+    load_s = args.load_s if args.load_s else (0.8 if args.smoke else 2.0)
+    res = run(load_s=load_s, pumpers=args.pumpers)
+    print(format_table(res))
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(res, indent=1, default=str))
+    print(f"wrote {out}")
+    if res["failed_requests"]:
+        print(f"FAIL: {res['failed_requests']} requests failed during the "
+              "swap — hot-swap must drop nothing")
+        return 1
+    if not res["swap"]["drained"]:
+        print("FAIL: pre-flip backlog not drained in time")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

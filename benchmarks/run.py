@@ -20,6 +20,7 @@ OUT = pathlib.Path("experiments/bench")
 def _modules(quick: bool):
     from . import (
         accuracy_sweep,
+        deploy_bench,
         fusion_bench,
         kernel_bench,
         roofline,
@@ -33,8 +34,9 @@ def _modules(quick: bool):
     mods = [table1_goap_vs_sw, table2_coo_overhead, table3_accum_ratio,
             table45_perf_model, kernel_bench, fusion_bench, roofline]
     if not quick:
-        # several CPU-minutes each: training sweep + full 4096-frame serve run
-        mods.extend([accuracy_sweep, serve_bench])
+        # several CPU-minutes each: training sweep, full 4096-frame serve
+        # run, and the hot-swap-under-load deployment bench
+        mods.extend([accuracy_sweep, serve_bench, deploy_bench])
     return mods
 
 

@@ -1,0 +1,146 @@
+"""Model lifecycle example: publish -> serve -> canary -> promote ->
+rollback, end to end.
+
+The paper's deployment target is a long-lived cognitive-radio edge node;
+this example walks the whole continual-update loop the deploy subsystem
+supports:
+
+1. train the paper model briefly and **publish** it to a versioned
+   registry (``production`` alias);
+2. train a little more and publish the update (``staging``);
+3. serve production through the async tier, then bind staging as a
+   **canary** taking a slice of the batches;
+4. let the :class:`CanaryMonitor` shadow-evaluate both versions per SNR
+   bucket (agreement scoring — no ground truth needed at the edge) and
+   **auto-promote** the clean canary via the atomic hot-swap flip;
+5. publish a deliberately-broken version and watch the monitor
+   **auto-roll-back** the moment its per-SNR scores collapse.
+
+Run:  PYTHONPATH=src python examples/amc_deploy.py [--registry DIR]
+"""
+import argparse
+import tempfile
+
+import numpy as np
+
+import jax
+
+from repro.configs.saocds_amc import CONFIG as SNN_CONFIG
+from repro.data.radioml import generate_batch
+from repro.deploy import (
+    CanaryMonitor,
+    ModelRegistry,
+    MonitorConfig,
+    canary_router,
+    publish_from_trainer,
+)
+from repro.serve import AsyncAMCServeEngine
+from repro.train.trainer import SNNTrainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--registry", default=None,
+                    help="registry directory (default: a temp dir)")
+    ap.add_argument("--train-steps", type=int, default=60)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--density", type=float, default=0.5)
+    ap.add_argument("--canary-pct", type=float, default=25.0)
+    args = ap.parse_args()
+
+    tmp = None
+    if args.registry is None:
+        tmp = tempfile.TemporaryDirectory()
+        args.registry = tmp.name
+    registry = ModelRegistry(args.registry)
+
+    # -- 1-2: train and publish two versions --------------------------------
+    print(f"[1/5] training {args.train_steps} steps at density "
+          f"{args.density}")
+    trainer = SNNTrainer(SNN_CONFIG, TrainerConfig(
+        total_steps=args.train_steps, batch_size=48, lr=2e-3,
+        final_density=args.density, snr_db=10.0))
+    trainer.run()
+    v1 = publish_from_trainer(registry, "amc", trainer, alias="production",
+                              metrics={"train_steps": trainer.step})
+    print(f"      published {v1.spec} (digest {v1.digest[:12]}…, plan "
+          f"{str(v1.plan_digest)[:12]}…) -> production")
+
+    print(f"[2/5] continuing training {args.train_steps // 2} more steps")
+    trainer.run(steps=max(1, args.train_steps // 2))
+    v2 = publish_from_trainer(registry, "amc", trainer, alias="staging",
+                              metrics={"train_steps": trainer.step})
+    print(f"      published {v2.spec} -> staging")
+
+    # -- 3: serve production, canary the update -----------------------------
+    prod = registry.load("amc@production")
+    engine = AsyncAMCServeEngine(prod.params, prod.cfg, masks=prod.masks,
+                                 backend="auto", max_batch=32,
+                                 version_label=v1.spec)
+    print(f"[3/5] serving {v1.spec} on backend '{engine.backend}'")
+    iq, labels, _ = generate_batch(seed=4242, batch=args.requests,
+                                   snr_db=10.0)
+    preds = engine.classify(iq)
+    print(f"      production accuracy on {args.requests} frames: "
+          f"{float((preds == labels).mean()):.3f}")
+
+    staging = registry.load("amc@staging")
+    engine.bind_version(v2.spec, staging.params, staging.masks)
+    engine.set_router(canary_router(v1.spec, v2.spec, args.canary_pct))
+    engine.classify(iq)  # traffic now splits across both versions
+
+    # -- 4: monitor promotes the clean canary -------------------------------
+    # labels scoring (the synthetic generator doubles as a labeled replay
+    # buffer): the canary must stay within tolerance of the baseline's
+    # per-SNR accuracy — a model trained longer clears this easily
+    mon = CanaryMonitor(engine, baseline=v1.spec, canary=v2.spec,
+                        config=MonitorConfig(
+                            snr_bins=(0.0, 10.0), frames_per_bin=32,
+                            score="labels", acc_drop_tol=0.3,
+                            min_rounds=1, promote_after=2),
+                        registry=registry, canary_spec=v2.spec)
+    decision = mon.run(max_rounds=5)
+    print(f"[4/5] monitor on {v2.spec}: {decision} ({mon.reason})")
+    assert decision == "promote", "a healthy canary should promote"
+    print(f"      primary is now {engine.active_version}; production "
+          f"alias -> v{registry.resolve('amc')[1]}")
+    engine.classify(iq)  # traffic now lands on the promoted version
+
+    # -- 5: a broken update rolls back automatically ------------------------
+    # fault injection: a "corrupted retrain" whose logit head is permuted
+    # — every prediction lands one class off, a regression the agreement
+    # score (no ground truth needed) catches deterministically
+    broken = jax.tree_util.tree_map(np.asarray, staging.params)
+    broken["fc"][-1] = dict(broken["fc"][-1],
+                            w=np.roll(broken["fc"][-1]["w"], 1, axis=1))
+    broken_masks = jax.tree_util.tree_map(np.asarray, staging.masks)
+    broken_masks["fc"][-1] = np.roll(broken_masks["fc"][-1], 1, axis=1)
+    v3 = registry.publish("amc", broken, SNN_CONFIG, masks=broken_masks,
+                          metrics={"note": "fault-injection demo"})
+    engine.bind_version(v3.spec, broken, broken_masks)
+    engine.set_router(canary_router(v2.spec, v3.spec, args.canary_pct))
+    mon = CanaryMonitor(engine, baseline=v2.spec, canary=v3.spec,
+                        config=MonitorConfig(
+                            snr_bins=(-10.0, 0.0, 10.0), frames_per_bin=16,
+                            score="agreement", acc_drop_tol=0.5,
+                            min_rounds=2),
+                        registry=registry, canary_spec=v3.spec)
+    decision = mon.run(max_rounds=5)
+    print(f"[5/5] monitor on broken {v3.spec}: {decision} ({mon.reason})")
+    assert decision == "rollback", "a broken canary should roll back"
+    assert engine.active_version == v2.spec
+
+    print("\nper-version serving stats:")
+    for label, st in engine.version_stats().items():
+        marker = "*" if label == engine.active_version else " "
+        print(f"  {marker}{label:10s} requests={st.requests:5d} "
+              f"batches={st.batches:4d} p99={st.p99_ms:.1f}ms")
+    print(f"registry versions: {registry.versions('amc')}, aliases "
+          f"{registry.aliases('amc')}")
+    engine.close()
+    if tmp is not None:
+        tmp.cleanup()
+
+
+if __name__ == "__main__":
+    main()

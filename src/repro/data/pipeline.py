@@ -61,7 +61,15 @@ def sigma_delta_encode_batch(iq: jax.Array, osr: int) -> jax.Array:
 
 
 class SpikeBatchPipeline:
-    """Background-threaded batch producer with bounded-queue backpressure."""
+    """Background-threaded batch producer with bounded-queue backpressure.
+
+    ``close()`` ends the stream for consumers too: a sentinel is left in
+    the queue so a consumer blocked in (or arriving at) ``__next__`` gets
+    ``StopIteration`` instead of hanging forever on an empty queue whose
+    producer has stopped.
+    """
+
+    _CLOSED = object()  # sentinel: producer stopped, stream is over
 
     def __init__(
         self,
@@ -100,21 +108,58 @@ class SpikeBatchPipeline:
     def __iter__(self) -> Iterator[Tuple[jax.Array, jax.Array, jax.Array]]:
         return self
 
+    def _put_sentinel(self) -> None:
+        """Non-blocking sentinel publish: never wait on a full queue (a
+        straggler producer could have refilled it), make room instead."""
+        while True:
+            try:
+                self._q.put_nowait(self._CLOSED)
+                return
+            except queue.Full:
+                try:
+                    self._q.get_nowait()
+                except queue.Empty:
+                    pass
+
     def __next__(self):
-        frames, labels, snrs = self._q.get()
-        if self.sharding is not None:
-            frames = jax.device_put(frames, self.sharding)
-            labels = jax.device_put(labels, self.sharding)
-        return frames, labels, snrs
+        while True:
+            item = self._q.get()
+            if item is self._CLOSED:
+                # leave the sentinel for siblings, then end the stream
+                self._put_sentinel()
+                raise StopIteration
+            if self._stop.is_set():
+                # a straggling producer (one that outlived close()'s join
+                # timeout) can land a batch behind the sentinel; once the
+                # stream is closed, stale batches are discarded so it can
+                # never appear to resume after StopIteration
+                continue
+            frames, labels, snrs = item
+            if self.sharding is not None:
+                frames = jax.device_put(frames, self.sharding)
+                labels = jax.device_put(labels, self.sharding)
+            return frames, labels, snrs
 
     def close(self):
+        """Stop the producer and end the stream for all consumers."""
         self._stop.set()
+        # unblock a producer stuck in put(), then let it exit
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
         self._thread.join(timeout=2.0)
+        # drain anything the producer managed to enqueue while exiting so
+        # the sentinel is what consumers reach next
+        try:
+            while True:
+                item = self._q.get_nowait()
+                if item is self._CLOSED:
+                    break
+        except queue.Empty:
+            pass
+        self._put_sentinel()
 
 
 def lm_token_batches(

@@ -1,0 +1,507 @@
+"""Content-addressed, versioned model registry for the AMC serving tier.
+
+A long-lived cognitive-radio edge node must update its model (new SNR
+regimes, retrained sparsity masks) without losing track of what is
+deployed.  The registry is the system of record: every published model is
+an immutable, content-hashed **version** — params + pruning masks + LSQ
+quantization state + the config that shapes them — written atomically to
+disk next to the :class:`~repro.plan.cache.PlanCache` tier, with named
+**aliases** (``production``, ``staging``) that the serving tier resolves
+at bind time.
+
+Layout (one directory per version, atomic ``os.replace`` publish)::
+
+    <root>/<name>/v0001/{arrays.npz, manifest.json}
+    <root>/<name>/v0002/...
+    <root>/<name>/aliases.json
+
+Content addressing: the digest covers the config plus every param / mask /
+LSQ leaf, so re-publishing identical content returns the *existing*
+version instead of minting a new one — an idempotent deploy pipeline by
+construction.  Publishing also compiles the version's
+:class:`~repro.plan.compile.ExecutionPlan` (recording its digest in the
+manifest and warming the shared plan cache), so a later hot-swap finds the
+expensive COO/schedule artifacts already on disk.
+
+``publish_from_checkpoint`` bridges from :mod:`repro.train.checkpoint`:
+restore a trainer checkpoint (params + masks + LSQ scales + step) and
+publish it as a registry version in one call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+import re
+import tempfile
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.models.snn import SNNConfig, init_snn
+from repro.plan.cache import default_store_root
+
+__all__ = [
+    "ModelVersion",
+    "LoadedModel",
+    "ModelRegistry",
+    "publish_from_trainer",
+    "publish_from_checkpoint",
+]
+
+ENV_DIR = "REPRO_REGISTRY_DIR"
+
+_VERSION_RE = re.compile(r"^v(\d{4,})$")
+_NAME_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
+
+# Manifest format version: bump on incompatible layout changes.
+_FORMAT = 1
+
+
+def _default_dir() -> pathlib.Path:
+    env = os.environ.get(ENV_DIR)
+    if env:
+        return pathlib.Path(env).expanduser()
+    return default_store_root() / "registry"
+
+
+# ---------------------------------------------------------------------------
+# (De)serialization helpers.
+# ---------------------------------------------------------------------------
+
+def _cfg_to_json(cfg: SNNConfig) -> Dict[str, Any]:
+    return dataclasses.asdict(cfg)
+
+
+def _cfg_from_json(d: Dict[str, Any]) -> SNNConfig:
+    # JSON turns the nested spec tuples into lists; restore them.
+    d = dict(d)
+    d["conv_specs"] = tuple(tuple(s) for s in d["conv_specs"])
+    d["fc_specs"] = tuple(tuple(s) for s in d["fc_specs"])
+    return SNNConfig(**d)
+
+
+def _flatten_group(group: str, tree) -> Dict[str, np.ndarray]:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return {f"{group}_{i:05d}": np.asarray(l) for i, l in enumerate(leaves)}
+
+
+def _unflatten_group(group: str, data, like) -> Any:
+    """Rebuild a pytree shaped ``like`` from npz entries ``group_NNNNN``."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    keys = sorted(k for k in data.files if k.startswith(f"{group}_"))
+    if len(keys) != len(leaves):
+        raise ValueError(
+            f"registry entry has {len(keys)} '{group}' leaves, expected "
+            f"{len(leaves)} (config drift?)")
+    restored = []
+    for key, leaf in zip(keys, leaves):
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"leaf {key}: shape {arr.shape} != expected {np.shape(leaf)}")
+        restored.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def _content_digest(cfg: SNNConfig, groups: Dict[str, Dict[str, np.ndarray]],
+                    quant_bits: Optional[int] = None) -> str:
+    h = hashlib.sha256(b"repro-registry-v1|")
+    h.update(repr(cfg).encode())
+    if quant_bits is not None:
+        h.update(f"|bits={quant_bits}|".encode())
+    for group in sorted(groups):
+        h.update(f"|{group}|".encode())
+        arrays = groups[group]
+        for key in sorted(arrays):
+            a = np.ascontiguousarray(arrays[key])
+            h.update(key.encode())
+            h.update(str(a.shape).encode())
+            h.update(str(a.dtype).encode())
+            h.update(a.tobytes())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Records.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelVersion:
+    """Immutable metadata for one published version (manifest mirror)."""
+
+    name: str
+    version: int
+    digest: str
+    created_at: float
+    cfg: SNNConfig
+    has_masks: bool
+    has_lsq: bool
+    quant_bits: int               # LSQ bit width (meaningful when has_lsq)
+    assignment: Any               # backend name or {layer: backend}
+    plan_digest: Optional[str]
+    metrics: Dict[str, Any]
+    path: str
+
+    @property
+    def spec(self) -> str:
+        return f"{self.name}@{self.version}"
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadedModel:
+    """A fully-materialized registry version, ready to bind or serve."""
+
+    params: Any
+    masks: Optional[Any]
+    lsq_scales: Optional[Any]
+    cfg: SNNConfig
+    version: ModelVersion
+
+
+# ---------------------------------------------------------------------------
+# The registry.
+# ---------------------------------------------------------------------------
+
+class ModelRegistry:
+    """Directory-backed versioned model store with named aliases.
+
+    All writes are atomic (tmp dir/file + ``os.replace``): a publisher
+    killed mid-write can never leave a half-written version that a serving
+    node would load.  In-process access is thread-safe; cross-process
+    publishing relies on the atomic renames (last alias write wins).
+    """
+
+    def __init__(self, root: Optional[str] = None):
+        self.root = pathlib.Path(root).expanduser() if root else _default_dir()
+        self.root.mkdir(parents=True, exist_ok=True)
+        self._lock = threading.RLock()
+
+    # -- paths --------------------------------------------------------------
+
+    def _model_dir(self, name: str) -> pathlib.Path:
+        if not _NAME_RE.match(name):
+            raise ValueError(f"invalid model name {name!r}")
+        return self.root / name
+
+    def _version_dir(self, name: str, version: int) -> pathlib.Path:
+        return self._model_dir(name) / f"v{version:04d}"
+
+    # -- enumeration --------------------------------------------------------
+
+    def models(self) -> List[str]:
+        return sorted(p.name for p in self.root.iterdir()
+                      if p.is_dir() and _NAME_RE.match(p.name))
+
+    def versions(self, name: str) -> List[int]:
+        mdir = self._model_dir(name)
+        if not mdir.exists():
+            return []
+        out = []
+        for p in mdir.iterdir():
+            m = _VERSION_RE.match(p.name)
+            if m and (p / "manifest.json").exists():
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest(self, name: str) -> Optional[int]:
+        vs = self.versions(name)
+        return vs[-1] if vs else None
+
+    # -- aliases ------------------------------------------------------------
+
+    def aliases(self, name: str) -> Dict[str, int]:
+        path = self._model_dir(name) / "aliases.json"
+        if not path.exists():
+            return {}
+        try:
+            return {str(k): int(v) for k, v in
+                    json.loads(path.read_text()).items()}
+        except Exception:  # noqa: BLE001 — treat a corrupt map as empty
+            return {}
+
+    def set_alias(self, name: str, alias: str, version: int) -> None:
+        # numeric and v<digits> forms are version references in resolve();
+        # allowing them as aliases would silently shadow real versions
+        if (not _NAME_RE.match(alias) or alias.isdigit()
+                or re.fullmatch(r"v\d+", alias)):
+            raise ValueError(f"invalid alias {alias!r}")
+        with self._lock:
+            if version not in self.versions(name):
+                raise KeyError(f"{name} has no version {version}")
+            amap = self.aliases(name)
+            amap[alias] = int(version)
+            self._write_aliases(name, amap)
+
+    def drop_alias(self, name: str, alias: str) -> None:
+        with self._lock:
+            amap = self.aliases(name)
+            amap.pop(alias, None)
+            self._write_aliases(name, amap)
+
+    def _write_aliases(self, name: str, amap: Dict[str, int]) -> None:
+        mdir = self._model_dir(name)
+        mdir.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=mdir, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(amap, f, indent=1)
+        os.replace(tmp, mdir / "aliases.json")
+
+    # -- resolve ------------------------------------------------------------
+
+    def resolve(self, spec: str) -> Tuple[str, int]:
+        """``name[@version|@alias]`` -> (name, version).
+
+        A bare ``name`` resolves through the ``production`` alias when set,
+        else to the latest version.
+        """
+        name, _, ref = spec.partition("@")
+        if not ref:
+            amap = self.aliases(name)
+            if "production" in amap:
+                return name, amap["production"]
+            latest = self.latest(name)
+            if latest is None:
+                raise KeyError(f"registry has no versions of {name!r}")
+            return name, latest
+        if ref.lstrip("v").isdigit():
+            version = int(ref.lstrip("v"))
+        else:
+            amap = self.aliases(name)
+            if ref not in amap:
+                raise KeyError(
+                    f"{name!r} has no alias {ref!r} (aliases: "
+                    f"{sorted(amap) or 'none'})")
+            version = amap[ref]
+        if version not in self.versions(name):
+            raise KeyError(f"{name} has no version {version}")
+        return name, version
+
+    # -- publish ------------------------------------------------------------
+
+    def publish(
+        self,
+        name: str,
+        params,
+        cfg: SNNConfig,
+        *,
+        masks=None,
+        lsq_scales=None,
+        quant_bits: int = 16,
+        assignment: Any = "goap",
+        metrics: Optional[Dict[str, Any]] = None,
+        alias: Optional[str] = None,
+        compile_plan_artifacts: bool = True,
+    ) -> ModelVersion:
+        """Publish one model version; idempotent on identical content.
+
+        ``assignment`` is the backend (or per-layer map) recorded for
+        serving; when ``compile_plan_artifacts`` is set the version's
+        :class:`ExecutionPlan` is compiled through the shared plan cache —
+        its digest lands in the manifest and the expensive COO/schedule
+        artifacts land on disk, so the serving node's hot-swap bind is a
+        cache hit.
+        """
+        groups = {"params": _flatten_group("params", params)}
+        if masks is not None:
+            groups["masks"] = _flatten_group("masks", masks)
+        if lsq_scales is not None:
+            groups["lsq"] = _flatten_group("lsq", lsq_scales)
+        digest = _content_digest(cfg, groups,
+                                 quant_bits if lsq_scales is not None
+                                 else None)
+
+        # everything expensive — the plan compile (cached, lock-free by
+        # construction) and the full-model array serialization — happens
+        # before the registry lock, so concurrent publishes, alias flips
+        # and resolves only ever wait on the version-number allocation,
+        # the manifest write, and the atomic rename
+        plan_digest = None
+        if compile_plan_artifacts:
+            plan_digest = self._compile_plan_digest(
+                params, cfg, masks, lsq_scales, quant_bits, assignment)
+
+        mdir = self._model_dir(name)
+        mdir.mkdir(parents=True, exist_ok=True)
+        tmp = pathlib.Path(tempfile.mkdtemp(dir=mdir, prefix=".tmp-pub-"))
+        try:
+            arrays = {k: v for g in groups.values() for k, v in g.items()}
+            np.savez(tmp / "arrays.npz", **arrays)
+
+            with self._lock:
+                existing = self.find_digest(name, digest)
+                if existing is not None:
+                    if alias:
+                        self.set_alias(name, alias, existing.version)
+                    return existing
+                version = (self.latest(name) or 0) + 1
+
+                manifest = {
+                    "format": _FORMAT,
+                    "name": name,
+                    "version": version,
+                    "digest": digest,
+                    "created_at": time.time(),
+                    "cfg": _cfg_to_json(cfg),
+                    "has_masks": masks is not None,
+                    "has_lsq": lsq_scales is not None,
+                    "quant_bits": int(quant_bits),
+                    "assignment": assignment,
+                    "plan_digest": plan_digest,
+                    "metrics": dict(metrics or {}),
+                }
+                (tmp / "manifest.json").write_text(json.dumps(manifest,
+                                                              indent=1))
+                final = self._version_dir(name, version)
+                os.replace(tmp, final)  # atomic publish
+                if alias:
+                    self.set_alias(name, alias, version)
+                return self._version_from_manifest(manifest, final)
+        finally:
+            if tmp.exists():
+                import shutil
+
+                shutil.rmtree(tmp, ignore_errors=True)
+
+    @staticmethod
+    def _compile_plan_digest(params, cfg, masks, lsq_scales, quant_bits,
+                             assignment) -> Optional[str]:
+        """Compile the version's plan (warming the shared cache)."""
+        try:
+            from repro.models.graph import compile_snn
+            from repro.plan import compile_plan
+
+            quant_fn = None
+            if lsq_scales is not None:
+                from repro.train.lsq import make_serving_quant_fn
+
+                quant_fn = make_serving_quant_fn(lsq_scales, quant_bits)
+            program = compile_snn(cfg)
+            return compile_plan(program, params, masks=masks,
+                                quant_fn=quant_fn,
+                                assignment=assignment).digest
+        except Exception:  # noqa: BLE001 — registry must publish even when
+            # a backend cannot bind on this host (e.g. pallas assignment on
+            # an unsupported platform); the manifest just lacks the digest
+            return None
+
+    def find_digest(self, name: str, digest: str) -> Optional[ModelVersion]:
+        for v in reversed(self.versions(name)):
+            mv = self.describe(name, v)
+            if mv.digest == digest:
+                return mv
+        return None
+
+    # -- load ---------------------------------------------------------------
+
+    def describe(self, name: str, version: int) -> ModelVersion:
+        vdir = self._version_dir(name, version)
+        manifest = json.loads((vdir / "manifest.json").read_text())
+        return self._version_from_manifest(manifest, vdir)
+
+    @staticmethod
+    def _version_from_manifest(manifest: Dict[str, Any],
+                               vdir: pathlib.Path) -> ModelVersion:
+        assignment = manifest["assignment"]
+        if isinstance(assignment, dict):
+            assignment = dict(assignment)
+        return ModelVersion(
+            name=manifest["name"], version=int(manifest["version"]),
+            digest=manifest["digest"], created_at=manifest["created_at"],
+            cfg=_cfg_from_json(manifest["cfg"]),
+            has_masks=bool(manifest["has_masks"]),
+            has_lsq=bool(manifest["has_lsq"]),
+            quant_bits=int(manifest.get("quant_bits", 16)),
+            assignment=assignment,
+            plan_digest=manifest.get("plan_digest"),
+            metrics=dict(manifest.get("metrics", {})),
+            path=str(vdir))
+
+    def load(self, spec: str) -> LoadedModel:
+        """Materialize ``name[@version|@alias]`` into live pytrees.
+
+        Tree *structures* are rebuilt from the version's own config (the
+        registry stores flat leaves), so a load can never silently mix a
+        new code structure with old bytes — shape drift raises.
+        """
+        name, version = self.resolve(spec)
+        mv = self.describe(name, version)
+        data = np.load(pathlib.Path(mv.path) / "arrays.npz")
+        like_params = init_snn(jax.random.PRNGKey(0), mv.cfg)
+        params = _unflatten_group("params", data, like_params)
+        masks = None
+        if mv.has_masks:
+            like_masks = jax.tree_util.tree_map(np.ones_like, {
+                "conv": [l["w"] for l in like_params["conv"]],
+                "fc": [l["w"] for l in like_params["fc"]],
+            })
+            masks = _unflatten_group("masks", data, like_masks)
+        lsq = None
+        if mv.has_lsq:
+            from repro.train.lsq import init_lsq_scales
+
+            lsq = _unflatten_group("lsq", data, init_lsq_scales(like_params))
+        return LoadedModel(params=params, masks=masks, lsq_scales=lsq,
+                           cfg=mv.cfg, version=mv)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint bridge.
+# ---------------------------------------------------------------------------
+
+def publish_from_trainer(registry: ModelRegistry, name: str, trainer, *,
+                         assignment: Any = "goap",
+                         metrics: Optional[Dict[str, Any]] = None,
+                         alias: Optional[str] = None) -> ModelVersion:
+    """Publish a live :class:`~repro.train.trainer.SNNTrainer`'s state."""
+    m = {"source_step": trainer.step, **(metrics or {})}
+    return registry.publish(
+        name, trainer.params, trainer.model_cfg, masks=trainer.masks,
+        lsq_scales=trainer.lsq_scales, quant_bits=trainer.cfg.quant_bits,
+        assignment=assignment, metrics=m, alias=alias)
+
+
+def publish_from_checkpoint(
+    registry: ModelRegistry,
+    name: str,
+    model_cfg: SNNConfig,
+    trainer_cfg=None,
+    *,
+    ckpt_dir: Optional[str] = None,
+    step: Optional[int] = None,
+    assignment: Any = "goap",
+    metrics: Optional[Dict[str, Any]] = None,
+    alias: Optional[str] = None,
+) -> ModelVersion:
+    """Restore a trainer checkpoint and publish it as a registry version.
+
+    ``trainer_cfg`` must match the run that wrote the checkpoint (it
+    shapes the masks/LSQ state trees); ``ckpt_dir`` overrides its
+    checkpoint directory.  ``step`` picks a specific checkpoint (default:
+    latest).
+    """
+    import dataclasses as _dc
+
+    from repro.train.trainer import SNNTrainer, TrainerConfig
+
+    tcfg = trainer_cfg if trainer_cfg is not None else TrainerConfig()
+    if ckpt_dir is not None:
+        tcfg = _dc.replace(tcfg, ckpt_dir=ckpt_dir)
+    if tcfg.ckpt_dir is None:
+        raise ValueError("no checkpoint directory: pass ckpt_dir= or a "
+                         "trainer_cfg with ckpt_dir set")
+    trainer = SNNTrainer(model_cfg, tcfg)
+    if not trainer.resume(step=step):
+        raise FileNotFoundError(f"no checkpoint under {tcfg.ckpt_dir}")
+    manifest = trainer.ckpt.read_manifest(trainer.step)
+    m = {"checkpoint_dir": str(tcfg.ckpt_dir),
+         **manifest.get("extra", {}), **(metrics or {})}
+    return publish_from_trainer(registry, name, trainer,
+                                assignment=assignment, metrics=m,
+                                alias=alias)

@@ -75,18 +75,60 @@ def main(argv=None) -> int:
                          "(async engine only)")
     ap.add_argument("--max-delay-ms", type=float, default=5.0)
     ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--registry", default=None, metavar="DIR",
+                    help="saocds-amc: serve from a model registry instead "
+                         "of fresh random weights")
+    ap.add_argument("--model", default="amc", metavar="NAME[@VER|@ALIAS]",
+                    help="registry spec to serve (default: 'amc', which "
+                         "resolves through the production alias)")
+    ap.add_argument("--canary", default=None, metavar="NAME@VER",
+                    help="registry spec to bind as a canary next to the "
+                         "primary (async engine only)")
+    ap.add_argument("--canary-pct", type=float, default=10.0,
+                    help="percent of batches routed to the canary")
     args = ap.parse_args(argv)
 
     if args.arch == "saocds-amc":
-        from repro.configs.saocds_amc import CONFIG as SNN_CONFIG
+        from repro.configs.saocds_amc import CONFIG
         from repro.data.radioml import generate_batch
         from repro.models.snn import init_snn
         from repro.serve import AMCServeEngine, AsyncAMCServeEngine
         from repro.train.pruning import make_mask_pytree
 
-        params = init_snn(jax.random.PRNGKey(0), SNN_CONFIG)
-        masks = make_mask_pytree(params, args.density)
-        iq, labels, _ = generate_batch(0, args.requests, snr_db=10.0)
+        SNN_CONFIG = CONFIG
+        registry = canary_loaded = None
+        version_label = "adhoc"
+        lsq_scales, quant_bits = None, 16
+        if args.registry:
+            from repro.deploy import ModelRegistry
+
+            registry = ModelRegistry(args.registry)
+            loaded = registry.load(args.model)
+            params, masks = loaded.params, loaded.masks
+            lsq_scales = loaded.lsq_scales
+            quant_bits = loaded.version.quant_bits
+            SNN_CONFIG = loaded.cfg
+            version_label = loaded.version.spec
+            print(f"registry: serving {version_label} "
+                  f"(digest {loaded.version.digest[:12]}…)")
+            if args.canary:
+                if args.engine == "sync":
+                    print("--canary requires the async engine "
+                          "(--engine async)")
+                    return 1
+                canary_loaded = registry.load(args.canary)
+                if canary_loaded.cfg != SNN_CONFIG:
+                    print("canary config differs from the primary's; "
+                          "a config change is a redeploy, not a canary")
+                    return 1
+        else:
+            if args.canary:
+                print("--canary requires --registry")
+                return 1
+            params = init_snn(jax.random.PRNGKey(0), SNN_CONFIG)
+            masks = make_mask_pytree(params, args.density)
+        iq, labels, _ = generate_batch(0, args.requests, snr_db=10.0,
+                                       frame_len=SNN_CONFIG.input_width)
         if args.engine == "sync":
             backend = args.backend
             if backend in ("auto", "per-layer"):
@@ -95,13 +137,17 @@ def main(argv=None) -> int:
                 backend = "goap"
             engine = AMCServeEngine(params, SNN_CONFIG, masks=masks,
                                     batch_size=args.batch,
-                                    count_activity=True, backend=backend)
+                                    count_activity=True, backend=backend,
+                                    lsq_scales=lsq_scales,
+                                    quant_bits=quant_bits)
             preds = engine.classify(iq)
         else:
             engine = AsyncAMCServeEngine(
                 params, SNN_CONFIG, masks=masks, backend=args.backend,
                 max_batch=args.batch, max_delay_ms=args.max_delay_ms,
-                workers=args.workers, count_activity=True)
+                workers=args.workers, count_activity=True,
+                version_label=version_label, lsq_scales=lsq_scales,
+                quant_bits=quant_bits)
             if engine.autotune is not None:
                 t = ", ".join(f"{k}={v:.1f}ms"
                               for k, v in engine.autotune.timings_ms.items())
@@ -110,7 +156,29 @@ def main(argv=None) -> int:
                 a = ", ".join(f"{k}={v}"
                               for k, v in engine.assignment.items())
                 print(f"per-layer autotune -> [{a}] (fused streaming plan)")
+            if canary_loaded is not None:
+                from repro.deploy import canary_router
+
+                clabel = canary_loaded.version.spec
+                if clabel == version_label:
+                    print(f"canary {clabel} is the primary version; "
+                          "skipping the split")
+                else:
+                    engine.bind_version(
+                        clabel, canary_loaded.params, canary_loaded.masks,
+                        lsq_scales=canary_loaded.lsq_scales,
+                        quant_bits=canary_loaded.version.quant_bits)
+                    engine.set_router(canary_router(version_label, clabel,
+                                                    args.canary_pct))
+                    print(f"canary: {clabel} at {args.canary_pct:.0f}% of "
+                          "batches")
             preds = engine.classify(iq)
+            for label, vstats in engine.version_stats().items():
+                marker = "*" if label == engine.active_version else " "
+                print(f"  {marker}{label:24s} backend={vstats.backend:9s} "
+                      f"requests={vstats.requests:5d} "
+                      f"batches={vstats.batches:4d} "
+                      f"p99={vstats.p99_ms:.1f}ms")
             engine.close()
         st = engine.stats
         print(f"requests={st.requests} batches={st.batches} "

@@ -28,10 +28,24 @@ import tempfile
 import threading
 from typing import Any, Dict, Optional
 
-__all__ = ["PlanCache", "default_cache", "set_default_cache"]
+__all__ = ["PlanCache", "default_cache", "set_default_cache",
+           "default_store_root"]
 
 ENV_DIR = "REPRO_PLAN_CACHE_DIR"
 _DEFAULT_DIR = os.path.join("~", ".cache", "repro", "plans")
+
+
+def default_store_root() -> pathlib.Path:
+    """Root of the on-disk artifact stores (``~/.cache/repro`` by default).
+
+    The plan cache's disk tier lives under ``<root>/plans``; sibling
+    stores — the model registry's version tree in particular — default to
+    directories next to it so one cache root holds every persisted
+    artifact tier.  Follows ``REPRO_PLAN_CACHE_DIR`` when it is set (the
+    registry then lands next to the relocated plan tier).
+    """
+    d = os.environ.get(ENV_DIR) or _DEFAULT_DIR
+    return pathlib.Path(d).expanduser().parent
 
 
 class PlanCache:

@@ -8,11 +8,12 @@ from .autotune import (
     default_candidates,
 )
 from .batcher import MicroBatch, MicroBatcher, Request, ServeFuture
-from .engine import AMCServeEngine, AsyncAMCServeEngine, ServeStats
+from .engine import AMCServeEngine, AsyncAMCServeEngine, BoundVersion, ServeStats
 
 __all__ = [
     "AMCServeEngine",
     "AsyncAMCServeEngine",
+    "BoundVersion",
     "ServeStats",
     "MicroBatcher",
     "MicroBatch",

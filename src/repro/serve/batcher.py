@@ -142,6 +142,9 @@ class MicroBatcher:
         self._clock = clock
         self._q: "queue.Queue" = queue.Queue()
         self._seq = itertools.count()
+        self._last_seq = -1    # highest seq ever submitted
+        self._handed_seq = -1  # highest seq handed to a consumer batch
+        self._handed = threading.Condition()
         self._closed = False
         # serializes submit vs close/drain: a submit either lands before
         # the close sentinel (and is served or drained) or raises — no
@@ -160,12 +163,37 @@ class MicroBatcher:
             if self._closed:
                 raise RuntimeError("MicroBatcher is closed")
             fut = ServeFuture()
-            self._q.put(Request(seq=next(self._seq), iq=iq,
+            seq = next(self._seq)
+            self._last_seq = seq
+            self._q.put(Request(seq=seq, iq=iq,
                                 t_enqueue=self._clock(), future=fut))
         return fut
 
     def qsize(self) -> int:
         return self._q.qsize()
+
+    def drain_barrier(self, timeout: Optional[float] = None) -> bool:
+        """Block until every request enqueued *before this call* has been
+        handed to a consumer batch; False on timeout.
+
+        This is the hot-swap drain point: after flipping the primary
+        version, waiting on the barrier guarantees the pre-flip backlog
+        has been batched (on the old or new plan — either way it will be
+        served, never dropped).  Requests submitted after the call do not
+        extend the wait.
+        """
+        with self._state_lock:
+            target = self._last_seq
+        deadline = None if timeout is None else self._clock() + timeout
+        with self._handed:
+            while self._handed_seq < target:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - self._clock()
+                    if remaining <= 0:
+                        return False
+                self._handed.wait(timeout=remaining)
+        return True
 
     def close(self) -> None:
         """Wake all worker loops; pending get_batch calls return None."""
@@ -187,9 +215,15 @@ class MicroBatcher:
                 try:
                     item = self._q.get_nowait()
                 except queue.Empty:
-                    return pending
+                    break
                 if item is not self._CLOSE:
                     pending.append(item)
+            if pending:
+                # drained requests count as handled (their futures are
+                # failed by the engine), so a pending drain_barrier wakes
+                # instead of waiting on requests that will never batch
+                self._mark_handed(max(r.seq for r in pending))
+            return pending
 
     # -- consumer side ------------------------------------------------------
 
@@ -225,5 +259,12 @@ class MicroBatcher:
         frames = np.zeros((bucket,) + self.frame_shape, dtype=np.float32)
         for i, r in enumerate(reqs):
             frames[i] = r.iq
+        self._mark_handed(max(r.seq for r in reqs))
         return MicroBatch(requests=reqs, bucket=bucket, frames=frames,
                           queue_depth=self._q.qsize())
+
+    def _mark_handed(self, seq: int) -> None:
+        with self._handed:
+            if seq > self._handed_seq:
+                self._handed_seq = seq
+            self._handed.notify_all()

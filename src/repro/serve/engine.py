@@ -28,6 +28,15 @@ Both engines report the cost-model counters (accumulations, fetched bits)
 that the power model consumes, which backend served each batch, and —
 new in the async tier era — per-request latency percentiles, sampled
 queue depths, and padded-frame counts.
+
+The async engine serves from a **version table** (label ->
+:class:`BoundVersion`, each with its own compiled step and
+:class:`ServeStats`): :meth:`~AsyncAMCServeEngine.bind_version` compiles
+a new model off the hot path, :meth:`~AsyncAMCServeEngine.swap_to` flips
+the primary atomically between micro-batches, and
+:meth:`~AsyncAMCServeEngine.set_router` splits traffic across versions —
+the hooks :mod:`repro.deploy` (registry / hot-swap / canary monitor)
+drives.
 """
 from __future__ import annotations
 
@@ -35,7 +44,7 @@ import dataclasses
 import threading
 import time
 from collections import Counter
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -57,7 +66,8 @@ from repro.serve.autotune import (
 )
 from repro.serve.batcher import MicroBatcher
 
-__all__ = ["AMCServeEngine", "AsyncAMCServeEngine", "ServeStats"]
+__all__ = ["AMCServeEngine", "AsyncAMCServeEngine", "ServeStats",
+           "BoundVersion"]
 
 
 @dataclasses.dataclass
@@ -166,6 +176,15 @@ def _fail_future(fut, err: BaseException) -> None:
         pass
 
 
+def _quant_fn_for(lsq_scales, quant_bits: int):
+    """Fresh per-bind fake-quant closure (None when not quantizing)."""
+    if lsq_scales is None:
+        return None
+    from repro.train.lsq import make_serving_quant_fn
+
+    return make_serving_quant_fn(lsq_scales, quant_bits)
+
+
 def count_batch_activity(stats: ServeStats, sparse, frames: np.ndarray,
                          cfg: SNNConfig) -> None:
     """Exact event counts through the conv stack (cost-model hooks).
@@ -204,6 +223,8 @@ class AMCServeEngine:
         batch_size: int = 32,
         count_activity: bool = False,
         backend: str = "goap",
+        lsq_scales=None,
+        quant_bits: int = 16,
     ):
         self.cfg = cfg
         self.batch_size = batch_size
@@ -217,6 +238,8 @@ class AMCServeEngine:
         # addressed cache, so engine restarts on unchanged weights rebuild
         # nothing (the software form of the paper's offline precomputation)
         self.plan = compile_plan(self.program, params, masks=masks,
+                                 quant_fn=_quant_fn_for(lsq_scales,
+                                                        quant_bits),
                                  assignment=backend)
         self._fwd = jax.jit(self.plan.bound.batch)
 
@@ -248,6 +271,29 @@ class AMCServeEngine:
 
     def _count(self, frames: np.ndarray) -> None:
         count_batch_activity(self.stats, self.sparse, frames, self.cfg)
+
+
+@dataclasses.dataclass
+class BoundVersion:
+    """One bound model version in the async engine's serving table.
+
+    The engine serves from a label -> ``BoundVersion`` table: the primary
+    label takes all traffic unless a router (canary / A/B split) is
+    installed.  Each version carries its own compiled step, plan, and
+    :class:`ServeStats`, so a canary's latency and accuracy are observable
+    independently of the production baseline.
+    """
+
+    label: str
+    backend: str
+    step: Any = dataclasses.field(repr=False)
+    plan: Any = dataclasses.field(repr=False)
+    sparse: Any = dataclasses.field(repr=False)
+    stats: ServeStats = dataclasses.field(default_factory=ServeStats)
+    # start of *this version's* serving window (earliest enqueue among the
+    # requests it served) — a late-bound canary's wall_s/throughput must
+    # not be diluted by traffic that predates its bind
+    t_first: float = float("inf")
 
 
 class AsyncAMCServeEngine:
@@ -289,9 +335,13 @@ class AsyncAMCServeEngine:
         warmup: bool = True,
         candidates: Optional[Sequence[str]] = None,
         autotune_reps: int = 2,
+        version_label: str = "default",
+        lsq_scales=None,
+        quant_bits: int = 16,
     ):
         self.cfg = cfg
         self.count_activity = count_activity
+        self.quant_bits = quant_bits
         self.program = compile_snn(cfg)
         self.sparse = sparsify_params(params, masks) if count_activity else None
 
@@ -321,6 +371,8 @@ class AsyncAMCServeEngine:
                 candidates=candidates, reps=autotune_reps)
             self.assignment = dict(self.perlayer.assignment)
             self.plan = compile_plan(self.program, params, masks=masks,
+                                     quant_fn=_quant_fn_for(lsq_scales,
+                                                            quant_bits),
                                      assignment=self.assignment)
         elif backend == "auto":
             probe_shape = (self.batcher.max_batch, ic0, cfg.input_width)
@@ -338,10 +390,15 @@ class AsyncAMCServeEngine:
         self.stats = ServeStats(backend=backend)
         if self.plan is not None:           # per-layer: fused streaming step
             self._step = self._wrap_batch_fn(self.plan.batch)
-        elif backend in raced_steps:        # reuse the race winner's compile
+        elif backend in raced_steps and lsq_scales is None:
+            # reuse the race winner's compile (raced binds are built
+            # without fake-quant, so with LSQ state the winner is only a
+            # backend choice — the serving step is rebuilt quantized)
             self._step = raced_steps[backend]
         else:                               # fixed backend: cached plan bind
             self.plan = compile_plan(self.program, params, masks=masks,
+                                     quant_fn=_quant_fn_for(lsq_scales,
+                                                            quant_bits),
                                      assignment=backend)
             self._step = self._wrap_batch_fn(self.plan.bound.batch)
 
@@ -349,6 +406,19 @@ class AsyncAMCServeEngine:
             for b in self.batcher.buckets:
                 jax.block_until_ready(
                     self._step(jnp.zeros((b, ic0, cfg.input_width), jnp.float32)))
+
+        # serving table: label -> BoundVersion.  The primary takes all
+        # traffic unless a router is installed (deploy.router); hot-swap
+        # (deploy.swap) binds a new version off-thread then flips _primary
+        # between micro-batches.
+        self._versions: Dict[str, BoundVersion] = {
+            version_label: BoundVersion(
+                label=version_label, backend=self.backend, step=self._step,
+                plan=self.plan, sparse=self.sparse,
+                stats=ServeStats(backend=self.backend)),
+        }
+        self._primary = version_label
+        self._router: Optional[Callable[[], str]] = None
 
         self._lock = threading.Lock()
         self._t_first_enqueue = float("inf")  # start of the serving window
@@ -386,13 +456,39 @@ class AsyncAMCServeEngine:
 
     # -- worker loop --------------------------------------------------------
 
+    def _route(self) -> BoundVersion:
+        """Pick the version serving the next batch (router, else primary).
+
+        A router naming a label that was removed mid-flight falls back to
+        the primary — routing can degrade, never crash the worker loop.
+        The table read happens under the engine lock so it can never
+        interleave with a swap_to/remove_version pair: the invariant that
+        the primary is always in the table holds while the lock is held.
+        """
+        label: Optional[str] = None
+        router = self._router
+        if router is not None:
+            try:
+                label = router()
+            except Exception:  # noqa: BLE001 — a broken router must not
+                label = None   # take the serving loop down with it
+        with self._lock:
+            ver = self._versions.get(label) if label is not None else None
+            return ver if ver is not None else self._versions[self._primary]
+
     def _worker(self) -> None:
         while not self._stop.is_set():
             batch = self.batcher.get_batch(timeout=0.1)
             if batch is None:
                 continue
             try:
-                logits = np.asarray(self._step(jnp.asarray(batch.frames)))
+                # the version is pinned *per batch*: a hot-swap flipping
+                # the primary mid-service never retargets an in-flight
+                # batch, so its futures complete on the plan that started
+                # them.  Routing runs inside the covered block: if it ever
+                # raises, the batch's futures fail instead of stranding.
+                ver = self._route()
+                logits = np.asarray(ver.step(jnp.asarray(batch.frames)))
                 preds = logits.argmax(-1).astype(np.int32)
                 n_real = batch.n_real
                 # activity counting is an expensive diagnostics mode; it
@@ -400,35 +496,39 @@ class AsyncAMCServeEngine:
                 # the futures resolve, so a caller that reads ``stats``
                 # right after its results always sees them counted
                 counted: Optional[ServeStats] = None
-                if self.count_activity:
+                if self.count_activity and ver.sparse is not None:
                     counted = ServeStats()
                     frames = sigma_delta_encode_np(
                         batch.frames[:n_real], self.cfg.timesteps)
-                    count_batch_activity(counted, self.sparse, frames,
+                    count_batch_activity(counted, ver.sparse, frames,
                                          self.cfg)
                 # completion is stamped after counting: callers' futures
                 # resolve after it, so latencies reflect what they waited
                 t_done = time.perf_counter()
                 with self._lock:
-                    self.stats.requests += n_real
-                    self.stats.record_batch(self.backend,
-                                            queue_depth=batch.queue_depth,
-                                            padded=batch.n_padded)
-                    self.stats.record_latencies(
-                        t_done - r.t_enqueue for r in batch.requests)
                     # serving window: first enqueue ever -> latest batch
                     # completion.  Correct for both the submit()/future
                     # path and (possibly concurrent) classify() callers.
-                    self._t_first_enqueue = min(
-                        self._t_first_enqueue,
-                        min(r.t_enqueue for r in batch.requests))
-                    # max(): a worker delayed by activity counting must not
-                    # shrink the window another worker already extended
-                    self.stats.wall_s = max(self.stats.wall_s,
-                                            t_done - self._t_first_enqueue)
-                    if counted is not None:
-                        self.stats.accumulations += counted.accumulations
-                        self.stats.fetched_bits += counted.fetched_bits
+                    # Each version additionally tracks its own window so a
+                    # late-bound canary's throughput is not diluted.
+                    batch_first = min(r.t_enqueue for r in batch.requests)
+                    self._t_first_enqueue = min(self._t_first_enqueue,
+                                                batch_first)
+                    ver.t_first = min(ver.t_first, batch_first)
+                    for st, t0 in ((self.stats, self._t_first_enqueue),
+                                   (ver.stats, ver.t_first)):
+                        st.requests += n_real
+                        st.record_batch(ver.backend,
+                                        queue_depth=batch.queue_depth,
+                                        padded=batch.n_padded)
+                        st.record_latencies(
+                            t_done - r.t_enqueue for r in batch.requests)
+                        # max(): a worker delayed by activity counting must
+                        # not shrink a window another worker extended
+                        st.wall_s = max(st.wall_s, t_done - t0)
+                        if counted is not None:
+                            st.accumulations += counted.accumulations
+                            st.fetched_bits += counted.fetched_bits
                 for i, r in enumerate(batch.requests):
                     # transitions PENDING -> RUNNING (after which cancel()
                     # can no longer win the race); False = caller cancelled
@@ -440,6 +540,116 @@ class AsyncAMCServeEngine:
                 # can never strand a future or kill the worker loop
                 for r in batch.requests:
                     _fail_future(r.future, e)
+
+    # -- model lifecycle (deploy subsystem hooks) ---------------------------
+
+    @property
+    def active_version(self) -> str:
+        """Label of the primary (default-traffic) version."""
+        return self._primary
+
+    def versions(self) -> Dict[str, BoundVersion]:
+        """Snapshot of the serving table (label -> BoundVersion)."""
+        with self._lock:
+            return dict(self._versions)
+
+    def get_version(self, label: str) -> BoundVersion:
+        return self._versions[label]
+
+    def version_stats(self) -> Dict[str, ServeStats]:
+        with self._lock:
+            return {k: v.stats for k, v in self._versions.items()}
+
+    def bind_version(self, label: str, params, masks=None, *,
+                     backend: Optional[str] = None,
+                     lsq_scales=None, quant_bits: Optional[int] = None,
+                     warmup: bool = True) -> BoundVersion:
+        """Compile and register a new model version under ``label``.
+
+        Safe to call from any thread while serving: the compile (plan bind
+        + per-bucket warmup) runs in the *caller's* thread against the
+        content-addressed plan cache, and only the final table insert
+        takes the engine lock — workers keep draining batches on the
+        current versions throughout.  The new version takes no traffic
+        until :meth:`swap_to` or a router targets it.
+
+        ``backend=None`` inherits the engine's serving backend (including
+        a ``per-layer`` heterogeneous assignment); ``backend="auto"``
+        re-races the candidates for the new weights.
+        """
+        if backend is None:
+            backend = self.backend
+        qfn = _quant_fn_for(lsq_scales,
+                            quant_bits if quant_bits is not None
+                            else self.quant_bits)
+        plan = None
+        if backend == "per-layer":
+            if not self.assignment:
+                # silently serving a uniform fallback while reporting
+                # "per-layer" would misstate what runs; the heterogeneous
+                # race only exists on engines constructed with it
+                raise ValueError(
+                    "backend='per-layer' requires an engine constructed "
+                    "with backend='per-layer' (no autotuned assignment to "
+                    "inherit); pass an explicit backend instead")
+            plan = compile_plan(self.program, params, masks=masks,
+                                quant_fn=qfn, assignment=self.assignment)
+            step = self._wrap_batch_fn(plan.batch)
+        else:
+            if backend == "auto":
+                ic0 = self.cfg.conv_specs[0][1]
+                probe = (self.batcher.max_batch, ic0, self.cfg.input_width)
+                backend = autotune_backend(self.program, params, probe,
+                                           masks=masks).choice
+            plan = compile_plan(self.program, params, masks=masks,
+                                quant_fn=qfn, assignment=backend)
+            step = self._wrap_batch_fn(plan.bound.batch)
+        sparse = sparsify_params(params, masks) if self.count_activity else None
+        if warmup:  # pre-compile every bucket so the flip never stalls
+            ic0 = self.cfg.conv_specs[0][1]
+            for b in self.batcher.buckets:
+                jax.block_until_ready(
+                    step(jnp.zeros((b, ic0, self.cfg.input_width),
+                                   jnp.float32)))
+        ver = BoundVersion(label=label, backend=backend, step=step,
+                           plan=plan, sparse=sparse,
+                           stats=ServeStats(backend=backend))
+        with self._lock:
+            self._versions[label] = ver
+        return ver
+
+    def swap_to(self, label: str) -> str:
+        """Atomically make ``label`` the primary version; returns the old.
+
+        The flip is a table-pointer update between micro-batches:
+        in-flight batches complete on the version that started them, and
+        the next batch any worker picks up serves from the new primary —
+        no request is dropped or blocked for more than one batch flush.
+        """
+        with self._lock:
+            if label not in self._versions:
+                raise KeyError(
+                    f"no bound version {label!r} (bound: "
+                    f"{sorted(self._versions)})")
+            old, self._primary = self._primary, label
+            ver = self._versions[label]
+            self.backend = ver.backend
+            self.plan = ver.plan
+            self.stats.backend = ver.backend
+        return old
+
+    def remove_version(self, label: str) -> None:
+        """Drop a non-primary version from the serving table."""
+        with self._lock:
+            if label == self._primary:
+                raise ValueError(
+                    f"cannot remove the primary version {label!r}; "
+                    "swap_to another version first")
+            self._versions.pop(label, None)
+
+    def set_router(self, router: Optional[Callable[[], str]]) -> None:
+        """Install (or clear, with None) the per-batch version router."""
+        self._router = router
 
     # -- public API ---------------------------------------------------------
 

@@ -115,6 +115,21 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def read_manifest(self, step: Optional[int] = None) -> Dict:
+        """Load a checkpoint's manifest without touching its arrays.
+
+        Cheap metadata access for lifecycle tooling (e.g. the model
+        registry's publish bridge records the source step and any
+        ``extra`` fields the trainer stamped at save time).
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.directory}")
+        path = os.path.join(self.directory, f"step_{step}", "manifest.json")
+        with open(path) as f:
+            return json.load(f)
+
     def restore(self, like: Any, step: Optional[int] = None) -> Tuple[Any, Dict]:
         """Rebuild a pytree shaped like ``like`` from checkpoint ``step``.
 

@@ -15,7 +15,8 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
-__all__ = ["lsq_fake_quant", "init_lsq_scales", "quantize_to_int", "dequantize"]
+__all__ = ["lsq_fake_quant", "init_lsq_scales", "make_serving_quant_fn",
+           "quantize_to_int", "dequantize"]
 
 
 def _round_ste(x: jax.Array) -> jax.Array:
@@ -51,6 +52,26 @@ def init_lsq_scales(params: Dict, bits: int = 16) -> Dict:
         "conv": [init_one(l["w"]) for l in params["conv"]],
         "fc": [init_one(l["w"]) for l in params["fc"]],
     }
+
+
+def make_serving_quant_fn(lsq_scales: Dict, bits: int = 16):
+    """Per-layer fake-quant closure for bind/compile paths.
+
+    Mirrors the trainer's ``_loss_fn`` threading: the bind walks the
+    weighted layers in graph order (conv then fc), so a stateful index
+    hands each layer its own trained step size.  Returns a **fresh**
+    closure — callers must not share one across compiles (the index
+    would drift if a compile aborts partway).
+    """
+    flat = list(lsq_scales["conv"]) + list(lsq_scales["fc"])
+    idx = {"i": 0}
+
+    def quant_fn(w: jax.Array) -> jax.Array:
+        s = flat[idx["i"] % len(flat)]
+        idx["i"] += 1
+        return lsq_fake_quant(w, s, bits)
+
+    return quant_fn
 
 
 def quantize_to_int(w: jax.Array, step: jax.Array, bits: int = 16) -> jax.Array:

@@ -186,13 +186,14 @@ class SNNTrainer:
         if self.ckpt:
             self.ckpt.save(self.step, self._state_tree(), extra={"step": self.step})
 
-    def resume(self) -> bool:
+    def resume(self, step: Optional[int] = None) -> bool:
+        """Restore training state from ``step`` (default: the latest)."""
         if not self.ckpt or self.ckpt.latest_step() is None:
             return False
         # build a like-tree with masks/lsq allocated if configured
         if (self.cfg.final_density or self.cfg.per_layer_density) and self.masks is None:
             self.masks = make_mask_pytree(self.params, 1.0)
-        tree, manifest = self.ckpt.restore(self._state_tree())
+        tree, manifest = self.ckpt.restore(self._state_tree(), step=step)
         self.params = tree["params"]
         self.opt_state = type(self.opt_state)(*tree["opt"]) if isinstance(tree["opt"], tuple) else tree["opt"]
         self.masks = tree["masks"]
@@ -210,7 +211,8 @@ class SNNTrainer:
             t0 = time.perf_counter()
             self._maybe_reprune()
             iq, labels, _ = generate_batch(
-                self.cfg.seed * 7_919 + self.step, self.cfg.batch_size, self.cfg.snr_db
+                self.cfg.seed * 7_919 + self.step, self.cfg.batch_size, self.cfg.snr_db,
+                frame_len=self.model_cfg.input_width,
             )
             frames = sigma_delta_encode_np(iq, self.cfg.osr)
             use_masks = self.masks is not None
@@ -247,7 +249,8 @@ class SNNTrainer:
     def evaluate(self, n_batches: int = 4, snr_db: Optional[float] = None, seed: int = 10_000) -> float:
         correct, total = 0, 0
         for b in range(n_batches):
-            iq, labels, _ = generate_batch(seed + b, self.cfg.batch_size, snr_db)
+            iq, labels, _ = generate_batch(seed + b, self.cfg.batch_size, snr_db,
+                                           frame_len=self.model_cfg.input_width)
             frames = sigma_delta_encode_np(iq, self.cfg.osr)
             use_masks = self.masks is not None
             logits = self._eval_logits(jnp.asarray(frames), use_masks)

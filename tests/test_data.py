@@ -71,3 +71,38 @@ def test_np_and_jax_encoders_agree():
     assert a.shape == (2, 8, 2, 128)
     assert set(np.unique(a)) <= {0.0, 1.0}
     assert b.shape[-1] == 128 or b.shape[1] == 8
+
+
+# ---------------------------------------------------------------------------
+# SpikeBatchPipeline shutdown semantics
+# ---------------------------------------------------------------------------
+
+def test_pipeline_yields_batches_then_stops_after_close():
+    """Regression: ``__next__`` used to block forever on the empty queue
+    once ``close()`` had stopped the producer; it must raise
+    ``StopIteration`` instead."""
+    import threading
+
+    from repro.data.pipeline import SpikeBatchPipeline
+
+    pipe = SpikeBatchPipeline(batch_size=4, osr=3, prefetch=2)
+    frames, labels, snrs = next(pipe)
+    assert frames.shape == (4, 3, 2, 128) and labels.shape == (4,)
+    pipe.close()
+
+    outcome = {}
+
+    def consume():
+        try:
+            while True:
+                next(pipe)
+        except StopIteration:
+            outcome["stopped"] = True
+
+    t = threading.Thread(target=consume, daemon=True)
+    t.start()
+    t.join(timeout=5.0)
+    assert outcome.get("stopped"), "consumer hung after close()"
+    # the stream stays ended for any later consumer too
+    with pytest.raises(StopIteration):
+        next(pipe)
