@@ -1,4 +1,5 @@
-"""Generate EXPERIMENTS.md §Dry-run/§Roofline tables from the sweep JSONs.
+"""Generate EXPERIMENTS.md §Dry-run/§Roofline tables from the sweep JSONs,
+plus markdown digests of the serving/deploy/robustness bench artifacts.
 
 Usage: PYTHONPATH=src python -m benchmarks.gen_report  [--write]
 Prints the markdown; with --write, replaces PLACEHOLDER_ROOFLINE_TABLE in
@@ -11,6 +12,50 @@ import json
 import pathlib
 
 DRY = pathlib.Path("experiments/dryrun")
+BENCH = pathlib.Path("experiments/bench")
+
+
+def _bench_json(name: str):
+    """Load a bench artifact from the repo root or experiments/bench."""
+    for p in (pathlib.Path(f"BENCH_{name}.json"), BENCH / f"{name}_bench.json"):
+        if p.exists():
+            return json.loads(p.read_text())
+    return None
+
+
+def deploy_md() -> str:
+    """One-paragraph digest of the hot-swap-under-load artifact."""
+    res = _bench_json("deploy")
+    if res is None:
+        return "_no deploy bench artifact (run benchmarks/deploy_bench.py)_"
+    sw, p99 = res["swap"], res["p99_ms"]
+    return (f"Hot-swap under load: bind {float(sw['bind_s']):.2f}s off the "
+            f"hot path, flip+drain {float(sw['flip_s']) * 1e3:.1f}ms, "
+            f"{res['requests']['total']} requests "
+            f"({res['failed_requests']} failed), p99 "
+            f"{p99['before']:.1f} -> {p99['during']:.1f} -> "
+            f"{p99['after']:.1f} ms (before/during/after).")
+
+
+def robustness_md() -> str:
+    """Markdown table of the scenario x SNR accuracy surface artifact."""
+    res = _bench_json("robustness")
+    if res is None:
+        return ("_no robustness bench artifact (run "
+                "benchmarks/robustness_bench.py)_")
+    surf = res["surface"]
+    head = ("| scenario | " + " | ".join(f"{s:+.0f} dB" for s in surf["snrs"])
+            + " |")
+    sep = "|---" * (len(surf["snrs"]) + 1) + "|"
+    rows = [f"| {name} | " + " | ".join(f"{a:.3f}" for a in row) + " |"
+            for name, row in zip(surf["scenarios"], surf["accuracy"])]
+    ag = res["agreement"]
+    tail = (f"\nCross-backend max |dlogit| on impaired frames: "
+            f"{float(ag['max_abs_logit_diff']):.2e} "
+            f"({'agrees' if ag['agrees'] else 'DISAGREES'} at atol "
+            f"{float(ag['atol']):g}); accuracy surface is the "
+            f"`{surf['backend']}` backend.")
+    return "\n".join([head, sep] + rows) + tail
 
 
 def _cells(mesh: str):
@@ -76,6 +121,8 @@ def main(argv=None) -> int:
     summary = dryrun_md()
     print(summary)
     print(table)
+    print("\n## Deployment\n\n" + deploy_md())
+    print("\n## Channel robustness\n\n" + robustness_md())
     if args.write:
         p = pathlib.Path("EXPERIMENTS.md")
         txt = p.read_text()

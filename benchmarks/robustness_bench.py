@@ -1,0 +1,178 @@
+"""Robustness benchmark: clean-vs-impaired accuracy + throughput, 4 backends.
+
+Two questions the channel subsystem makes answerable:
+
+* **accuracy** — what does each execution backend score on clean
+  (legacy-channel) frames vs frames run through the scenario suite's
+  channels, per SNR?  All four backends must agree on the impaired frames
+  (max |dlogit| <= 1e-5) — sparsity-aware execution must not interact with
+  channel conditions.
+* **throughput** — what does running the channel *inside* the jitted step
+  cost?  Per backend: frames/s for the bare Σ-Δ encode + forward vs the
+  same step with ``apply_scenario`` fused in front (the serving-tier
+  drift-injection path), plus the standalone channel application rate.
+
+Run:  PYTHONPATH=src python benchmarks/robustness_bench.py [--smoke] [--out p]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import init_snn
+from repro.channel import scenario_fn, suite_scenarios
+from repro.configs.saocds_amc import CONFIG as CFG
+from repro.data.pipeline import sigma_delta_encode_batch
+from repro.data.radioml import generate_batch
+from repro.eval import RobustnessConfig, evaluate_robustness
+from repro.models.graph import compile_snn
+from repro.plan import compile_plan
+from repro.train.pruning import make_mask_pytree
+
+NAME = "robustness_bench"
+
+BACKENDS = ("dense", "goap", "pallas", "stream")
+DENSITY = 0.5
+
+
+def _time_fn(fn, x, reps: int) -> float:
+    jax.block_until_ready(fn(x))  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(x))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(smoke: bool = False) -> dict:
+    # sizes are bounded by the pallas interpret-mode path (~3 frames/s on a
+    # CI-class CPU): full mode stays in the single-digit-minutes range
+    frames_per_cell = 16 if smoke else 32
+    snr_grid = (0.0, 10.0) if smoke else (-10.0, 0.0, 10.0)
+    thr_batch = 32 if smoke else 64
+    reps = 2 if smoke else 3
+
+    params = init_snn(jax.random.PRNGKey(0), CFG)
+    masks = make_mask_pytree(params, DENSITY)
+
+    # -- accuracy sweep (clean reference + quick scenario pair, 4 backends)
+    eval_cfg = RobustnessConfig(
+        suite="quick", snr_grid=snr_grid, frames_per_cell=frames_per_cell,
+        backends=BACKENDS, seed=0)
+    report = evaluate_robustness(params, CFG, eval_cfg, masks=masks)
+
+    # -- throughput: bare step vs channel-fused step, per backend ----------
+    program = compile_snn(CFG)
+    scen = suite_scenarios("quick")[-1]          # doppler_drift
+    sfn = scenario_fn(scen)
+    iq, _, snrs = generate_batch(1, thr_batch, snr_db=10.0,
+                                 frame_len=CFG.input_width,
+                                 apply_channel=False)
+    x = jnp.asarray(iq)
+    snrs_j = jnp.asarray(snrs)
+    key = jax.random.PRNGKey(0)
+
+    throughput = {}
+    for backend in BACKENDS:
+        plan = compile_plan(program, params, masks=masks, assignment=backend)
+
+        def bare(iq_b, p=plan):
+            return p.bound.batch(sigma_delta_encode_batch(iq_b,
+                                                          CFG.timesteps))
+
+        def fused(iq_b, p=plan):
+            imp = sfn(iq_b, snrs_j, key)
+            return p.bound.batch(sigma_delta_encode_batch(imp,
+                                                          CFG.timesteps))
+
+        t_bare = _time_fn(jax.jit(bare), x, reps)
+        t_fused = _time_fn(jax.jit(fused), x, reps)
+        throughput[backend] = {
+            "clean_fps": thr_batch / t_bare,
+            "impaired_fps": thr_batch / t_fused,
+            "channel_overhead": t_fused / t_bare - 1.0,
+        }
+    t_chan = _time_fn(lambda b: sfn(b, snrs_j, key), x, reps)
+
+    primary = BACKENDS[0]
+    clean_acc = {b: float(np.mean([c["accuracy"][b]
+                                   for c in report["clean"].values()]))
+                 for b in BACKENDS}
+    impaired_acc = {b: float(np.mean(
+        [cell["accuracy"][b]
+         for s in report["scenarios"].values()
+         for cell in s["per_snr"].values()]))
+        for b in BACKENDS}
+
+    return {
+        "jax_backend": jax.default_backend(),
+        "smoke": smoke,
+        "density": DENSITY,
+        "frames_per_cell": frames_per_cell,
+        "snr_grid": list(snr_grid),
+        "scenarios": report["config"]["scenarios"],
+        "throughput_batch": thr_batch,
+        "throughput_scenario": scen.name,
+        "surface": report["surface"],
+        "clean_accuracy_mean": clean_acc,
+        "impaired_accuracy_mean": impaired_acc,
+        "agreement": report["agreement"],
+        "throughput": throughput,
+        "channel_apply_fps": thr_batch / t_chan,
+        "primary_backend": primary,
+        "eval_wall_s": report["wall_s_by_backend"],
+    }
+
+
+def format_table(res: dict) -> str:
+    ag = res["agreement"]
+    lines = [
+        f"Robustness bench ({res['jax_backend']} backend, "
+        f"{res['frames_per_cell']} frames/cell, scenarios "
+        f"{res['scenarios']}, SNRs {res['snr_grid']})",
+        f"  cross-backend agreement on impaired frames: max |dlogit| = "
+        f"{ag['max_abs_logit_diff']:.2e} "
+        f"({'OK' if ag['agrees'] else 'DISAGREES'})",
+        "  backend     acc(clean)  acc(impaired)   clean fps  impaired fps"
+        "  chan overhead",
+    ]
+    for b in res["throughput"]:
+        t = res["throughput"][b]
+        lines.append(
+            f"  {b:<11s}{res['clean_accuracy_mean'][b]:>9.3f}"
+            f"{res['impaired_accuracy_mean'][b]:>14.3f}"
+            f"{t['clean_fps']:>12.0f}{t['impaired_fps']:>14.0f}"
+            f"{t['channel_overhead']:>13.1%}")
+    lines.append(f"  standalone channel application: "
+                 f"{res['channel_apply_fps']:.0f} frames/s "
+                 f"({res['throughput_scenario']})")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced cells/reps for CI smoke runs")
+    ap.add_argument("--out", default="BENCH_robustness.json")
+    args = ap.parse_args(argv)
+
+    res = run(smoke=args.smoke)
+    print(format_table(res))
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(res, indent=1, default=str))
+    print(f"wrote {out}")
+    if not res["agreement"]["agrees"]:
+        print("FAIL: backends disagree on impaired frames")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,7 @@ def _modules(quick: bool):
         deploy_bench,
         fusion_bench,
         kernel_bench,
+        robustness_bench,
         roofline,
         serve_bench,
         table1_goap_vs_sw,
@@ -35,8 +36,10 @@ def _modules(quick: bool):
             table45_perf_model, kernel_bench, fusion_bench, roofline]
     if not quick:
         # several CPU-minutes each: training sweep, full 4096-frame serve
-        # run, and the hot-swap-under-load deployment bench
-        mods.extend([accuracy_sweep, serve_bench, deploy_bench])
+        # run, the hot-swap-under-load deployment bench, and the
+        # scenario-robustness sweep across all four backends
+        mods.extend([accuracy_sweep, serve_bench, deploy_bench,
+                     robustness_bench])
     return mods
 
 

@@ -62,6 +62,13 @@ from repro.models.snn import (
     param_count,
     sparsify_params,
 )
+from repro.channel import (
+    SCENARIOS,
+    ChannelScenario,
+    apply_scenario,
+    make_frame_source,
+)
+from repro.eval import RobustnessConfig, evaluate_robustness
 
 __all__ = [
     # graph / program
@@ -91,4 +98,11 @@ __all__ = [
     "sparsify_params",
     "param_count",
     "density_report",
+    # channel scenarios / robustness evaluation
+    "ChannelScenario",
+    "SCENARIOS",
+    "apply_scenario",
+    "make_frame_source",
+    "RobustnessConfig",
+    "evaluate_robustness",
 ]

@@ -1,0 +1,62 @@
+"""RF channel-impairment simulation: the scenario-diversity leg of the stack.
+
+JAX-traceable, seed-deterministic impairments (:mod:`.impairments`)
+composed into declarative named :class:`ChannelScenario` stacks
+(:mod:`.scenario`) with one vmapped/jitted entry point,
+:func:`apply_scenario` — usable host-side in the data pipeline and inside
+compiled serving/training steps — plus :func:`make_frame_source`, the
+adapter that lets :class:`repro.deploy.CanaryMonitor` shadow-evaluate
+under injected channel drift.
+"""
+
+from .impairments import (
+    avg_power,
+    awgn,
+    carrier_offset,
+    interferer_tones,
+    iq_imbalance,
+    legacy_awgn_channel,
+    multipath_fading,
+    normalize_power,
+    phase_noise,
+    timing_offset,
+    to_complex,
+    to_iq,
+)
+from .scenario import (
+    SCENARIOS,
+    SUITES,
+    ChannelScenario,
+    apply_scenario,
+    apply_scenario_np,
+    get_scenario,
+    make_frame_source,
+    scenario_fn,
+    stable_seed,
+    suite_scenarios,
+)
+
+__all__ = [
+    "ChannelScenario",
+    "SCENARIOS",
+    "SUITES",
+    "get_scenario",
+    "suite_scenarios",
+    "apply_scenario",
+    "apply_scenario_np",
+    "scenario_fn",
+    "stable_seed",
+    "make_frame_source",
+    "to_complex",
+    "to_iq",
+    "avg_power",
+    "normalize_power",
+    "awgn",
+    "carrier_offset",
+    "phase_noise",
+    "timing_offset",
+    "iq_imbalance",
+    "multipath_fading",
+    "interferer_tones",
+    "legacy_awgn_channel",
+]

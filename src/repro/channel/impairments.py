@@ -1,0 +1,287 @@
+"""JAX-traceable RF channel impairments (the GNU Radio dynamic-channel family).
+
+RadioML 2016 frames are produced by GNU Radio's dynamic channel model:
+AWGN, carrier frequency/phase offset, oscillator phase noise, sample-rate
+(timing) offset, and — in the harder variants — selective multipath fading
+with Doppler and co-channel interference.  This module implements each of
+those impairments as a pure, seed-deterministic ``jax.numpy`` function on a
+complex baseband frame, so a full channel realization can run **inside** a
+jitted/vmapped serving or training step (no host callbacks) and is exactly
+reproducible from a ``jax.random`` key.
+
+Conventions shared by every impairment:
+
+* signals are complex64 vectors ``(L,)`` at baseband; :func:`to_complex` /
+  :func:`to_iq` convert to/from the repo's real ``(2, L)`` I/Q layout;
+* frequencies are normalized to the sample rate (cycles/sample);
+* **power discipline** — multiplicative and resampling impairments
+  (offsets, phase noise, fading, IQ imbalance, timing) preserve the input's
+  average power exactly (unitary rotations) or by explicit renormalization,
+  so impairment *order* never silently changes the operating SNR.  Additive
+  impairments (:func:`awgn`, :func:`interferer_tones`) first normalize the
+  signal to unit power and then add energy at an analytically-known level
+  (noise power ``10^(-snr/10)``, interference ``10^(-sir/10)``).
+
+The legacy host-side channel that :mod:`repro.data.radioml` has always
+applied (AWGN + random CFO/phase + phase noise, vectorized numpy) now lives
+here as :func:`legacy_awgn_channel`; ``radioml._apply_channel`` is an alias,
+so the ``static_awgn`` scenario and the dataset generator share one
+implementation by construction.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "to_complex",
+    "to_iq",
+    "avg_power",
+    "normalize_power",
+    "awgn",
+    "carrier_offset",
+    "phase_noise",
+    "timing_offset",
+    "iq_imbalance",
+    "multipath_fading",
+    "interferer_tones",
+    "legacy_awgn_channel",
+]
+
+
+# ---------------------------------------------------------------------------
+# I/Q <-> complex plumbing.
+# ---------------------------------------------------------------------------
+
+def to_complex(iq: jax.Array) -> jax.Array:
+    """(..., 2, L) real I/Q -> (..., L) complex64 baseband."""
+    return (iq[..., 0, :] + 1j * iq[..., 1, :]).astype(jnp.complex64)
+
+
+def to_iq(sig: jax.Array) -> jax.Array:
+    """(..., L) complex baseband -> (..., 2, L) float32 I/Q."""
+    return jnp.stack([sig.real, sig.imag], axis=-2).astype(jnp.float32)
+
+
+def avg_power(sig: jax.Array) -> jax.Array:
+    """Mean |x|^2 over the frame (the unit every impairment preserves)."""
+    return jnp.mean(jnp.abs(sig) ** 2)
+
+
+def normalize_power(sig: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Rescale to unit average power (the AWGN reference level)."""
+    return sig / jnp.sqrt(avg_power(sig) + eps)
+
+
+def _match_power(out: jax.Array, ref: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Rescale ``out`` so its average power equals ``ref``'s."""
+    return out * jnp.sqrt((avg_power(ref) + eps) / (avg_power(out) + eps))
+
+
+# ---------------------------------------------------------------------------
+# Additive impairments.
+# ---------------------------------------------------------------------------
+
+def awgn(sig: jax.Array, key: jax.Array, snr_db: jax.Array,
+         _noise: Optional[jax.Array] = None) -> jax.Array:
+    """Unit-normalize the signal, then add complex white noise at ``snr_db``.
+
+    Same math (and op order) as the noise step of
+    :func:`legacy_awgn_channel`.  ``_noise`` injects a pre-drawn
+    unit-variance complex noise vector (tests use it to compare the jax and
+    numpy paths on identical randomness).
+    """
+    sig = normalize_power(sig)
+    if _noise is None:
+        kr, ki = jax.random.split(key)
+        _noise = (jax.random.normal(kr, sig.shape)
+                  + 1j * jax.random.normal(ki, sig.shape))
+    p_noise = 10.0 ** (-jnp.asarray(snr_db, jnp.float32) / 10.0)
+    return sig + _noise.astype(sig.dtype) * jnp.sqrt(p_noise / 2.0)
+
+
+def interferer_tones(sig: jax.Array, key: jax.Array, sir_db: float,
+                     f_min: float = 0.05, f_max: float = 0.45,
+                     n_tones: int = 1) -> jax.Array:
+    """Add co-channel interferer tone(s) at random adjacent offsets.
+
+    Each tone sits at a random normalized frequency with ``|f|`` in
+    ``[f_min, f_max]`` (random sign — the neighbor can be on either side),
+    random phase, and total interference power ``10^(-sir_db/10)`` relative
+    to the *current* signal power, split evenly across tones.
+    """
+    n = sig.shape[-1]
+    kf, ks, kp = jax.random.split(key, 3)
+    f = jax.random.uniform(kf, (n_tones,), minval=f_min, maxval=f_max)
+    sign = jnp.where(jax.random.bernoulli(ks, 0.5, (n_tones,)), 1.0, -1.0)
+    phi = jax.random.uniform(kp, (n_tones,), minval=0.0, maxval=2 * jnp.pi)
+    t = jnp.arange(n, dtype=jnp.float32)
+    tones = jnp.exp(1j * (2 * jnp.pi * (sign * f)[:, None] * t[None, :]
+                          + phi[:, None]))
+    p_int = avg_power(sig) * 10.0 ** (-sir_db / 10.0)
+    amp = jnp.sqrt(p_int / n_tones)
+    return sig + amp * tones.sum(axis=0).astype(sig.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Multiplicative (power-preserving) impairments.
+# ---------------------------------------------------------------------------
+
+def carrier_offset(sig: jax.Array, key: jax.Array, max_cfo: float,
+                   random_phase: bool = True) -> jax.Array:
+    """Random carrier frequency offset (uniform in ±max_cfo) + phase.
+
+    A unitary per-sample rotation: average power is preserved exactly.
+    """
+    kc, kp = jax.random.split(key)
+    cfo = jax.random.uniform(kc, (), minval=-max_cfo, maxval=max_cfo)
+    phi0 = jnp.where(random_phase,
+                     jax.random.uniform(kp, (), minval=0.0,
+                                        maxval=2 * jnp.pi), 0.0)
+    n = jnp.arange(sig.shape[-1], dtype=jnp.float32)
+    return sig * jnp.exp(1j * (2 * jnp.pi * cfo * n + phi0))
+
+
+def phase_noise(sig: jax.Array, key: jax.Array, scale: float) -> jax.Array:
+    """Wiener-process oscillator phase noise (random-walk phase).
+
+    Matches the legacy channel's ``cumsum(normal * scale)`` model; unitary,
+    so power-preserving.
+    """
+    pn = jnp.cumsum(jax.random.normal(key, sig.shape) * scale)
+    return sig * jnp.exp(1j * pn)
+
+
+def timing_offset(sig: jax.Array, key: jax.Array, max_sro: float,
+                  max_jitter: float = 0.5) -> jax.Array:
+    """Sample-rate offset + fractional timing via a Farrow resampler.
+
+    Draws a relative rate offset ``sro`` uniform in ``±max_sro`` and an
+    initial fractional delay uniform in ``[0, max_jitter]`` samples, then
+    evaluates the signal at ``t_k = k * (1 + sro) + tau`` with the cubic
+    Lagrange Farrow structure (four neighboring taps, polynomial in the
+    fractional part — the standard software-radio fractional resampler).
+    Edge samples clamp to the frame boundary; output power is renormalized
+    to the input's.
+    """
+    n = sig.shape[-1]
+    ks, kt = jax.random.split(key)
+    sro = jax.random.uniform(ks, (), minval=-max_sro, maxval=max_sro)
+    tau = jax.random.uniform(kt, (), minval=0.0, maxval=max_jitter)
+    t = jnp.arange(n, dtype=jnp.float32) * (1.0 + sro) + tau
+    base = jnp.floor(t)
+    mu = t - base                      # fractional part in [0, 1)
+    i0 = base.astype(jnp.int32) - 1    # taps at i0 .. i0+3
+    idx = jnp.clip(i0[None, :] + jnp.arange(4)[:, None], 0, n - 1)
+    x = sig[idx]                       # (4, L) neighbor taps
+    # cubic Lagrange basis in mu (Farrow branch polynomials)
+    c0 = -mu * (mu - 1.0) * (mu - 2.0) / 6.0
+    c1 = (mu + 1.0) * (mu - 1.0) * (mu - 2.0) / 2.0
+    c2 = -(mu + 1.0) * mu * (mu - 2.0) / 2.0
+    c3 = (mu + 1.0) * mu * (mu - 1.0) / 6.0
+    out = (c0 * x[0] + c1 * x[1] + c2 * x[2] + c3 * x[3]).astype(sig.dtype)
+    return _match_power(out, sig)
+
+
+def iq_imbalance(sig: jax.Array, key: jax.Array, max_amp_db: float,
+                 max_phase_deg: float) -> jax.Array:
+    """Receiver I/Q gain + phase mismatch: ``y = mu*x + nu*conj(x)``.
+
+    Draws a gain mismatch uniform in ``±max_amp_db`` and a phase mismatch
+    uniform in ``±max_phase_deg`` and applies the standard baseband model
+    ``mu = (1 + g e^{j phi})/2``, ``nu = (1 - g e^{j phi})/2`` (the image
+    term ``nu`` is what makes IQ imbalance visible to a classifier).
+    Output power is renormalized to the input's.
+    """
+    kg, kp = jax.random.split(key)
+    g_db = jax.random.uniform(kg, (), minval=-max_amp_db, maxval=max_amp_db)
+    phi = jnp.deg2rad(jax.random.uniform(kp, (), minval=-max_phase_deg,
+                                         maxval=max_phase_deg))
+    g = 10.0 ** (g_db / 20.0)
+    rot = g * jnp.exp(1j * phi)
+    mu = 0.5 * (1.0 + rot)
+    nu = 0.5 * (1.0 - rot)
+    out = (mu * sig + nu * jnp.conj(sig)).astype(sig.dtype)
+    return _match_power(out, sig)
+
+
+def multipath_fading(sig: jax.Array, key: jax.Array,
+                     path_delays: Sequence[int] = (0, 1, 3),
+                     path_powers: Sequence[float] = (1.0, 0.5, 0.25),
+                     doppler: float = 0.01, rician_k: float = 0.0,
+                     n_sinusoids: int = 8) -> jax.Array:
+    """Time-varying Rayleigh/Rician multipath with Doppler.
+
+    Each discrete-delay path carries an independent Jakes sum-of-sinusoids
+    tap process: ``h_p(t) = sum_k exp(j(2 pi f_d t cos(a_k) + phi_k)) /
+    sqrt(K)`` with random arrival angles ``a_k`` and phases ``phi_k`` —
+    seed-deterministic, fully traceable, and time-*selective* when
+    ``doppler`` (max Doppler shift, cycles/sample) is nonzero.  With
+    ``rician_k > 0`` the first path gets a constant line-of-sight component
+    at K-factor ``rician_k`` (Rician fading); ``rician_k = 0`` is pure
+    Rayleigh.  ``path_powers`` (the power-delay profile) are normalized to
+    sum to one and delays are static sample shifts (frame-edge zero fill).
+    Output power is renormalized to the input's, so fading reshapes the
+    frame without moving the operating SNR.
+    """
+    delays = tuple(int(d) for d in path_delays)
+    powers = np.asarray(path_powers, np.float32)
+    powers = powers / powers.sum()
+    n = sig.shape[-1]
+    t = jnp.arange(n, dtype=jnp.float32)
+    out = jnp.zeros_like(sig)
+    keys = jax.random.split(key, len(delays))
+    for p, (d, kp) in enumerate(zip(delays, keys)):
+        ka, kf, kl = jax.random.split(kp, 3)
+        angles = jax.random.uniform(ka, (n_sinusoids,), minval=0.0,
+                                    maxval=2 * jnp.pi)
+        phases = jax.random.uniform(kf, (n_sinusoids,), minval=0.0,
+                                    maxval=2 * jnp.pi)
+        osc = jnp.exp(1j * (2 * jnp.pi * doppler
+                            * jnp.cos(angles)[:, None] * t[None, :]
+                            + phases[:, None]))
+        h = osc.sum(axis=0) / jnp.sqrt(jnp.float32(n_sinusoids))
+        if p == 0 and rician_k > 0.0:
+            theta = jax.random.uniform(kl, (), minval=0.0, maxval=2 * jnp.pi)
+            los = jnp.sqrt(rician_k / (rician_k + 1.0)) * jnp.exp(1j * theta)
+            h = los + h * jnp.sqrt(1.0 / (rician_k + 1.0))
+        delayed = sig if d == 0 else jnp.concatenate(
+            [jnp.zeros((d,), sig.dtype), sig[..., :-d]], axis=-1)
+        out = out + jnp.sqrt(powers[p]) * h.astype(sig.dtype) * delayed
+    return _match_power(out, sig)
+
+
+# ---------------------------------------------------------------------------
+# The legacy host-side channel (moved verbatim from repro.data.radioml).
+# ---------------------------------------------------------------------------
+
+def legacy_awgn_channel(
+    rng: np.random.Generator, sig: np.ndarray, snr_db: float,
+    max_cfo: float = 0.01, phase_noise: bool = True,
+) -> np.ndarray:
+    """The dataset generator's channel: AWGN + random CFO/phase (+ phase
+    noise), vectorized numpy, deterministic in the ``rng`` state.
+
+    This is the original ``repro.data.radioml._apply_channel`` — it lives
+    here so the ``static_awgn`` scenario and the dataset share one
+    implementation; ``radioml._apply_channel`` aliases it (bit-equal by
+    construction, pinned by tests).
+    """
+    n = len(sig)
+    # random carrier frequency + phase offset
+    cfo = rng.uniform(-max_cfo, max_cfo)
+    phi0 = rng.uniform(0, 2 * np.pi)
+    sig = sig * np.exp(1j * (2 * np.pi * cfo * np.arange(n) + phi0))
+    if phase_noise:
+        pn = np.cumsum(rng.normal(scale=2e-3, size=n))
+        sig = sig * np.exp(1j * pn)
+    # normalize signal power then add AWGN at requested SNR
+    p_sig = np.mean(np.abs(sig) ** 2) + 1e-12
+    sig = sig / np.sqrt(p_sig)
+    p_noise = 10 ** (-snr_db / 10)
+    noise = (rng.normal(size=n) + 1j * rng.normal(size=n)) * np.sqrt(p_noise / 2)
+    return sig + noise

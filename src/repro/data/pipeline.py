@@ -67,6 +67,13 @@ class SpikeBatchPipeline:
     the queue so a consumer blocked in (or arriving at) ``__next__`` gets
     ``StopIteration`` instead of hanging forever on an empty queue whose
     producer has stopped.
+
+    ``scenario`` (a name from :data:`repro.channel.SCENARIOS` or a
+    :class:`~repro.channel.ChannelScenario`) inserts a channel-augmentation
+    stage: the generator emits *clean* modulated frames and the producer
+    thread runs them through the scenario's jitted channel at each frame's
+    SNR before Σ-Δ encoding — deterministic in ``(seed, batch index,
+    scenario)``.
     """
 
     _CLOSED = object()  # sentinel: producer stopped, stream is over
@@ -79,18 +86,29 @@ class SpikeBatchPipeline:
         snr_db: Optional[float] = None,
         prefetch: int = 4,
         sharding: Optional[jax.sharding.Sharding] = None,
+        scenario=None,
     ):
         self.osr = osr
         self.sharding = sharding
-        self._ds = iter(RadioMLDataset(batch_size, seed=seed, snr_db=snr_db))
+        self._scenario = scenario
+        self._seed = seed
+        self._ds = iter(RadioMLDataset(batch_size, seed=seed, snr_db=snr_db,
+                                       apply_channel=scenario is None))
         self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
     def _worker(self):
+        step = 0
         while not self._stop.is_set():
             iq, labels, snrs = next(self._ds)
+            if self._scenario is not None:
+                from repro.channel import apply_scenario_np
+
+                iq = apply_scenario_np(self._scenario, iq, snrs,
+                                       self._seed + step)
+            step += 1
             frames = sigma_delta_encode_np(iq, self.osr)
             try:
                 self._q.put((frames, labels, snrs), timeout=1.0)

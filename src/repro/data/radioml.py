@@ -16,9 +16,12 @@ deterministic in (seed, index).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Iterator, Optional, Tuple
 
 import numpy as np
+
+from repro.channel.impairments import legacy_awgn_channel
 
 __all__ = [
     "MODULATIONS",
@@ -44,24 +47,36 @@ SPS = 8  # samples per symbol for linear digital modulations
 # Pulse shaping
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
 def _rrc_taps(beta: float = 0.35, span: int = 8, sps: int = SPS) -> np.ndarray:
-    """Root-raised-cosine filter taps."""
+    """Root-raised-cosine filter taps (vectorized, cached per parameter set).
+
+    The closed form has two removable singularities — t = 0 and
+    |4*beta*t| = 1 — handled by ``np.where`` over the same formulas the old
+    per-tap loop branched on (elementwise identical, so bit-equal).  The
+    cache returns one read-only array per (beta, span, sps): tap
+    construction never re-runs per generated batch.
+    """
     n = span * sps
     t = (np.arange(-n // 2, n // 2 + 1)) / sps
-    taps = np.zeros_like(t)
-    for i, ti in enumerate(t):
-        if abs(ti) < 1e-9:
-            taps[i] = 1.0 - beta + 4 * beta / np.pi
-        elif abs(abs(4 * beta * ti) - 1.0) < 1e-9:
-            taps[i] = (beta / np.sqrt(2)) * (
-                (1 + 2 / np.pi) * np.sin(np.pi / (4 * beta))
-                + (1 - 2 / np.pi) * np.cos(np.pi / (4 * beta))
-            )
-        else:
-            num = np.sin(np.pi * ti * (1 - beta)) + 4 * beta * ti * np.cos(np.pi * ti * (1 + beta))
-            den = np.pi * ti * (1 - (4 * beta * ti) ** 2)
-            taps[i] = num / den
-    return taps / np.sqrt(np.sum(taps**2))
+    near_zero = np.abs(t) < 1e-9
+    singular = np.abs(np.abs(4 * beta * t) - 1.0) < 1e-9
+    with np.errstate(divide="ignore", invalid="ignore"):
+        num = np.sin(np.pi * t * (1 - beta)) + 4 * beta * t * np.cos(np.pi * t * (1 + beta))
+        den = np.pi * t * (1 - (4 * beta * t) ** 2)
+        taps = num / den
+    taps = np.where(
+        singular,
+        (beta / np.sqrt(2)) * (
+            (1 + 2 / np.pi) * np.sin(np.pi / (4 * beta))
+            + (1 - 2 / np.pi) * np.cos(np.pi / (4 * beta))
+        ),
+        taps,
+    )
+    taps = np.where(near_zero, 1.0 - beta + 4 * beta / np.pi, taps)
+    taps = taps / np.sqrt(np.sum(taps**2))
+    taps.flags.writeable = False  # shared across callers via the cache
+    return taps
 
 
 _RRC = _rrc_taps()
@@ -69,11 +84,14 @@ _RRC = _rrc_taps()
 _GAUSS_BT = 0.35
 
 
+@functools.lru_cache(maxsize=None)
 def _gaussian_taps(bt: float = _GAUSS_BT, span: int = 4, sps: int = SPS) -> np.ndarray:
     t = np.arange(-span * sps // 2, span * sps // 2 + 1) / sps
     sigma = np.sqrt(np.log(2)) / (2 * np.pi * bt)
     taps = np.exp(-(t**2) / (2 * sigma**2))
-    return taps / taps.sum()
+    taps = taps / taps.sum()
+    taps.flags.writeable = False
+    return taps
 
 
 _GAUSS = _gaussian_taps()
@@ -175,30 +193,24 @@ def _modulate_analog(rng: np.random.Generator, scheme: str, n: int) -> np.ndarra
 # Channel
 # ---------------------------------------------------------------------------
 
-def _apply_channel(
-    rng: np.random.Generator, sig: np.ndarray, snr_db: float,
-    max_cfo: float = 0.01, phase_noise: bool = True,
-) -> np.ndarray:
-    n = len(sig)
-    # random carrier frequency + phase offset
-    cfo = rng.uniform(-max_cfo, max_cfo)
-    phi0 = rng.uniform(0, 2 * np.pi)
-    sig = sig * np.exp(1j * (2 * np.pi * cfo * np.arange(n) + phi0))
-    if phase_noise:
-        pn = np.cumsum(rng.normal(scale=2e-3, size=n))
-        sig = sig * np.exp(1j * pn)
-    # normalize signal power then add AWGN at requested SNR
-    p_sig = np.mean(np.abs(sig) ** 2) + 1e-12
-    sig = sig / np.sqrt(p_sig)
-    p_noise = 10 ** (-snr_db / 10)
-    noise = (rng.normal(size=n) + 1j * rng.normal(size=n)) * np.sqrt(p_noise / 2)
-    return sig + noise
+# The channel is owned by repro.channel (where its jax-traceable scenario
+# twins live); this alias keeps the generator's historical call sites and
+# numerics — bit-equality is pinned in tests/test_channel.py.
+_apply_channel = legacy_awgn_channel
 
 
 def generate_sample(
-    seed: int, modulation: str, snr_db: float, frame_len: int = FRAME_LEN
+    seed: int, modulation: str, snr_db: float, frame_len: int = FRAME_LEN,
+    apply_channel: bool = True,
 ) -> np.ndarray:
-    """One (2, frame_len) float32 I/Q frame, deterministic in seed."""
+    """One (2, frame_len) float32 I/Q frame, deterministic in seed.
+
+    ``apply_channel=False`` yields the clean modulated baseband (no AWGN /
+    CFO / phase noise) — the input expected by
+    :func:`repro.channel.apply_scenario`, which applies its own channel.
+    The rng draw order is unchanged either way, so the underlying symbol
+    stream for a given seed is identical clean and impaired.
+    """
     rng = np.random.default_rng(seed)
     if modulation in _CONSTELLATIONS:
         sig = _modulate_linear(rng, modulation, frame_len)
@@ -206,7 +218,8 @@ def generate_sample(
         sig = _modulate_fsk(rng, modulation, frame_len)
     else:
         sig = _modulate_analog(rng, modulation, frame_len)
-    sig = _apply_channel(rng, sig, snr_db)
+    if apply_channel:
+        sig = _apply_channel(rng, sig, snr_db)
     out = np.stack([sig.real, sig.imag]).astype(np.float32)
     # match RadioML's roughly unit-energy frames
     return out / (np.sqrt(np.mean(out**2)) * np.sqrt(2) + 1e-9)
@@ -218,8 +231,14 @@ def generate_batch(
     snr_db: Optional[float] = None,
     classes: Optional[Tuple[int, ...]] = None,
     frame_len: int = FRAME_LEN,
+    apply_channel: bool = True,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Returns (iq (B, 2, L) f32, labels (B,) i32, snrs (B,) f32)."""
+    """Returns (iq (B, 2, L) f32, labels (B,) i32, snrs (B,) f32).
+
+    With ``apply_channel=False`` the frames are clean modulated baseband
+    (``snrs`` still names each frame's *intended* operating SNR, for the
+    scenario channel to realize later).
+    """
     rng = np.random.default_rng(seed)
     cls_pool = np.asarray(classes if classes is not None else range(N_CLASSES))
     labels = cls_pool[rng.integers(0, len(cls_pool), batch)]
@@ -229,7 +248,8 @@ def generate_batch(
         else np.asarray(rng.choice(SNR_GRID, batch), dtype=np.float32)
     )
     iq = np.stack([
-        generate_sample(int(seed * 1_000_003 + i), MODULATIONS[labels[i]], float(snrs[i]), frame_len)
+        generate_sample(int(seed * 1_000_003 + i), MODULATIONS[labels[i]],
+                        float(snrs[i]), frame_len, apply_channel)
         for i in range(batch)
     ])
     return iq.astype(np.float32), labels.astype(np.int32), snrs
@@ -237,17 +257,24 @@ def generate_batch(
 
 @dataclasses.dataclass
 class RadioMLDataset:
-    """Deterministic infinite stream of (iq, label, snr) batches."""
+    """Deterministic infinite stream of (iq, label, snr) batches.
+
+    ``apply_channel=False`` streams clean modulated frames for consumers
+    that run their own :mod:`repro.channel` scenario (the pipeline's
+    augmentation stage sets this automatically).
+    """
 
     batch_size: int
     seed: int = 0
     snr_db: Optional[float] = None  # None -> uniform over the SNR grid
     frame_len: int = FRAME_LEN
+    apply_channel: bool = True
 
     def __iter__(self) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
         step = 0
         while True:
             yield generate_batch(
-                self.seed + step, self.batch_size, self.snr_db, frame_len=self.frame_len
+                self.seed + step, self.batch_size, self.snr_db,
+                frame_len=self.frame_len, apply_channel=self.apply_channel,
             )
             step += 1

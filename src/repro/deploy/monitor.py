@@ -31,7 +31,12 @@ Scoring modes:
   worries about).
 
 ``frame_source`` is pluggable (seed, n, snr) -> (iq, labels) so replay
-buffers or recorded captures can stand in for the synthetic generator.
+buffers or recorded captures can stand in for the synthetic generator —
+and so channel drift can be *injected*:
+``repro.channel.make_frame_source("doppler_drift", frame_len=...)``
+shadow-evaluates both sides under a fading/CFO/timing-drift channel
+instead of the clean dataset channel (tested: a drift-sensitive canary
+rolls back, an equivalent one is not falsely rolled back).
 """
 from __future__ import annotations
 
@@ -43,16 +48,30 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.channel import stable_seed
+
 __all__ = ["MonitorConfig", "WindowResult", "CanaryMonitor"]
 
 FrameSource = Callable[[int, int, float], Tuple[np.ndarray, np.ndarray]]
 
 
-def _default_frame_source(seed: int, n: int, snr_db: float,
-                          frame_len: int):
-    from repro.data.radioml import generate_batch
+def _snr_bin_seed(snr_db: float) -> int:
+    """Stable 32-bit seed offset for one SNR bucket.
 
-    iq, labels, _ = generate_batch(seed, n, snr_db=snr_db,
+    Hashes the bytes of the *float* (shared :func:`repro.channel.stable_seed`
+    primitive): the old ``int(snr) * 131`` derivation collapsed fractional
+    bins (0.5 and 0.9 both truncate to 0) into identical frame draws,
+    silently evaluating two buckets on the same frames.
+    """
+    return stable_seed("snr-bin", snr_db)
+
+
+def _default_frame_source(seed: int, n: int, snr_db: float,
+                          frame_len: int, n_classes: int):
+    from repro.data.radioml import N_CLASSES, generate_batch
+
+    classes = (tuple(range(n_classes)) if n_classes < N_CLASSES else None)
+    iq, labels, _ = generate_batch(seed, n, snr_db=snr_db, classes=classes,
                                    frame_len=frame_len)
     return iq, labels
 
@@ -114,8 +133,10 @@ class CanaryMonitor:
         self.config = config or MonitorConfig()
         if frame_source is None:
             width = engine.cfg.input_width  # frames must match the model
+            n_cls = engine.cfg.n_classes    # labels must stay in range
             frame_source = (lambda seed, n, snr:
-                            _default_frame_source(seed, n, snr, width))
+                            _default_frame_source(seed, n, snr, width,
+                                                  n_cls))
         self.frame_source = frame_source
         self.registry = registry
         self.canary_spec = canary_spec
@@ -148,7 +169,7 @@ class CanaryMonitor:
         base_acc: Dict[float, float] = {}
         can_acc: Dict[float, float] = {}
         for snr in cfg.snr_bins:
-            seed = cfg.seed + 7919 * self._round + int(snr) * 131
+            seed = cfg.seed + 7919 * self._round + _snr_bin_seed(snr)
             iq, labels = self.frame_source(seed, cfg.frames_per_bin, snr)
             base_preds = self._predict(self.baseline, iq)
             can_preds = self._predict(self.canary, iq)

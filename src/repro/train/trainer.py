@@ -52,6 +52,11 @@ class TrainerConfig:
     # quantization
     use_lsq: bool = False
     quant_bits: int = 16
+    # channel-scenario augmentation (None -> legacy dataset channel).
+    # A repro.channel scenario name / ChannelScenario: training batches are
+    # generated clean and impaired through the scenario's jitted channel,
+    # so the model sees the robustness suite's conditions during BPTT.
+    augment_scenario: Optional[Any] = None
     # fault tolerance
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 100
@@ -105,6 +110,12 @@ class SNNTrainer:
         self.stragglers: List[int] = []
         self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep_ckpts) if cfg.ckpt_dir else None
         self._jit_step = jax.jit(self._train_step, static_argnames=("use_masks",))
+        # reduced configs classify a class subset: drawing labels outside
+        # [0, n_classes) made the NLL silently NaN on such models
+        from repro.data.radioml import N_CLASSES
+
+        self._classes = (tuple(range(model_cfg.n_classes))
+                         if model_cfg.n_classes < N_CLASSES else None)
         # one persistent jitted eval forward: rebuilding it per evaluate()
         # call would retrace (and rebind) every time
         program = compile_snn(model_cfg)
@@ -210,10 +221,18 @@ class SNNTrainer:
         while self.step < end:
             t0 = time.perf_counter()
             self._maybe_reprune()
-            iq, labels, _ = generate_batch(
+            scenario = self.cfg.augment_scenario
+            iq, labels, snrs = generate_batch(
                 self.cfg.seed * 7_919 + self.step, self.cfg.batch_size, self.cfg.snr_db,
                 frame_len=self.model_cfg.input_width,
+                classes=self._classes,
+                apply_channel=scenario is None,
             )
+            if scenario is not None:
+                from repro.channel import apply_scenario_np
+
+                iq = apply_scenario_np(scenario, iq, snrs,
+                                       self.cfg.seed * 7_919 + self.step)
             frames = sigma_delta_encode_np(iq, self.cfg.osr)
             use_masks = self.masks is not None
             (self.params, self.opt_state, self.lsq_scales, loss, acc, gnorm) = self._jit_step(
@@ -246,11 +265,22 @@ class SNNTrainer:
 
     # -- evaluation -----------------------------------------------------------
 
-    def evaluate(self, n_batches: int = 4, snr_db: Optional[float] = None, seed: int = 10_000) -> float:
+    def evaluate(self, n_batches: int = 4, snr_db: Optional[float] = None,
+                 seed: int = 10_000, scenario=None) -> float:
+        """Accuracy over fresh batches; ``scenario`` evaluates under an
+        injected :mod:`repro.channel` condition instead of the legacy
+        dataset channel."""
         correct, total = 0, 0
         for b in range(n_batches):
-            iq, labels, _ = generate_batch(seed + b, self.cfg.batch_size, snr_db,
-                                           frame_len=self.model_cfg.input_width)
+            iq, labels, snrs = generate_batch(
+                seed + b, self.cfg.batch_size, snr_db,
+                frame_len=self.model_cfg.input_width,
+                classes=self._classes,
+                apply_channel=scenario is None)
+            if scenario is not None:
+                from repro.channel import apply_scenario_np
+
+                iq = apply_scenario_np(scenario, iq, snrs, seed + b)
             frames = sigma_delta_encode_np(iq, self.cfg.osr)
             use_masks = self.masks is not None
             logits = self._eval_logits(jnp.asarray(frames), use_masks)
