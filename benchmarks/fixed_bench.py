@@ -1,0 +1,219 @@
+"""Fixed-point tier benchmark: float-vs-fixed accuracy, parity, throughput.
+
+Three questions the hardware-parity tier makes answerable:
+
+* **fidelity** — what does quantizing to Qm.n integer inference *cost in
+  accuracy*, per channel scenario and SNR?  The float reference (``goap``)
+  and the integer ``fixed`` backend sweep the same seeded cells, so each
+  per-SNR delta isolates the quantization error from the channel draw.
+* **parity** — do the backend's integer logits match the pure-NumPy golden
+  datapath interpreter bit for bit, at both 8 and 16 bits?  A mismatch is
+  a datapath bug, not a tolerance issue — the bench exits nonzero.
+* **throughput** — what does integer inference cost (or save) next to the
+  float backends on this host, same batch shape, steady state?
+
+Run:  PYTHONPATH=src python benchmarks/fixed_bench.py [--smoke] [--out p]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import init_snn
+from repro.configs.saocds_amc import CONFIG as CFG
+from repro.data.pipeline import sigma_delta_encode_batch
+from repro.data.radioml import generate_batch
+from repro.eval import RobustnessConfig, evaluate_robustness
+from repro.fixed import (FixedQuantFn, build_golden, fixed_encode_batch)
+from repro.models.graph import compile_snn
+from repro.plan import compile_plan
+from repro.train.lsq import init_lsq_scales
+from repro.train.pruning import make_mask_pytree
+
+NAME = "fixed_bench"
+
+SCENARIOS = ("static_awgn", "urban_fading")
+FLOAT_BACKENDS = ("dense", "goap")
+DENSITY = 0.5
+BITS = 16                       # the paper datapath width (accuracy sweep)
+
+
+def _time_fn(fn, x, reps: int) -> float:
+    jax.block_until_ready(fn(x))  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(x))
+    return (time.perf_counter() - t0) / reps
+
+
+def _golden_parity(params, masks, scales, n_frames: int) -> dict:
+    """Bit-exactness of the jitted fixed backend vs the NumPy golden."""
+    program = compile_snn(CFG)
+    iq, _, _ = generate_batch(3, n_frames, snr_db=10.0,
+                              frame_len=CFG.input_width)
+    out = {}
+    for bits in (8, 16):
+        plan = compile_plan(program, params, masks=masks,
+                            quant_fn=FixedQuantFn(scales, bits=bits),
+                            assignment="fixed")
+        step = jax.jit(lambda x, p=plan: p.bound.batch(
+            fixed_encode_batch(x, CFG.timesteps)))
+        got = np.asarray(step(jnp.asarray(iq, jnp.float32)))
+        golden = build_golden(CFG, params, masks=masks,
+                              quant_fn=FixedQuantFn(scales, bits=bits))
+        want = np.stack([golden.forward_iq(f) for f in iq])
+        out[f"q{bits}"] = {
+            "n_frames": n_frames,
+            "bit_exact": bool(np.array_equal(got, want)),
+            "max_abs_int_diff": int(np.abs(
+                got.astype(np.int64) - want.astype(np.int64)).max()),
+        }
+    return out
+
+
+def run(smoke: bool = False) -> dict:
+    frames_per_cell = 16 if smoke else 48
+    snr_grid = (0.0, 10.0) if smoke else (-10.0, 0.0, 10.0, 18.0)
+    thr_batch = 16 if smoke else 64
+    reps = 2 if smoke else 3
+    parity_frames = 2 if smoke else 8
+
+    params = init_snn(jax.random.PRNGKey(0), CFG)
+    masks = make_mask_pytree(params, DENSITY)
+    scales = init_lsq_scales(params, BITS)
+
+    # -- golden parity gate (both widths) ---------------------------------
+    parity = _golden_parity(params, masks, scales, parity_frames)
+
+    # -- accuracy: float reference sweep, then the quantized sweep --------
+    # Both sweeps draw identical frames per cell (seeded by scenario+SNR),
+    # so per-SNR accuracy deltas isolate the quantization error.  The
+    # quantized sweep's ``dense`` leg serves fake-quantized float weights —
+    # the dequantized reference — so its |dlogit| vs ``fixed`` measures the
+    # genuine float-vs-fixed divergence on the shared logit scale.
+    eval_cfg = RobustnessConfig(
+        suite="quick", snr_grid=snr_grid, frames_per_cell=frames_per_cell,
+        backends=("goap",), seed=0, include_clean=False)
+    float_rep = evaluate_robustness(params, CFG, eval_cfg, masks=masks,
+                                    scenarios=SCENARIOS)
+    fixed_cfg = RobustnessConfig(
+        suite="quick", snr_grid=snr_grid, frames_per_cell=frames_per_cell,
+        backends=("dense", "fixed"), seed=0, include_clean=False,
+        agreement_atol=float("inf"))
+    fixed_rep = evaluate_robustness(
+        params, CFG, fixed_cfg, masks=masks,
+        quant_fn=FixedQuantFn(scales, bits=BITS), scenarios=SCENARIOS)
+
+    def _acc(rep, scen, snr, backend):
+        return rep["scenarios"][scen]["per_snr"][f"{snr:+.1f}"][
+            "accuracy"][backend]
+
+    accuracy = {}
+    for scen in SCENARIOS:
+        per_snr = {}
+        for snr in snr_grid:
+            f32 = _acc(float_rep, scen, snr, "goap")
+            fq = _acc(fixed_rep, scen, snr, "dense")
+            fx = _acc(fixed_rep, scen, snr, "fixed")
+            per_snr[f"{snr:+.1f}"] = {
+                "float": f32, "fakequant": fq, "fixed": fx,
+                "delta_fixed_vs_float": round(fx - f32, 4),
+            }
+        deltas = [c["delta_fixed_vs_float"] for c in per_snr.values()]
+        accuracy[scen] = {"per_snr": per_snr,
+                          "mean_delta": float(np.mean(deltas)),
+                          "worst_delta": float(np.min(deltas))}
+
+    # -- throughput: integer step vs the float backends -------------------
+    program = compile_snn(CFG)
+    iq, _, _ = generate_batch(1, thr_batch, snr_db=10.0,
+                              frame_len=CFG.input_width)
+    x = jnp.asarray(iq, jnp.float32)
+    throughput = {}
+    for backend in FLOAT_BACKENDS:
+        plan = compile_plan(program, params, masks=masks, assignment=backend)
+        fn = jax.jit(lambda b, p=plan: p.bound.batch(
+            sigma_delta_encode_batch(b, CFG.timesteps)))
+        throughput[backend] = {"fps": thr_batch / _time_fn(fn, x, reps)}
+    plan = compile_plan(program, params, masks=masks,
+                        quant_fn=FixedQuantFn(scales, bits=BITS),
+                        assignment="fixed")
+    fn = jax.jit(lambda b, p=plan: p.bound.batch(
+        fixed_encode_batch(b, CFG.timesteps)))
+    throughput["fixed"] = {"fps": thr_batch / _time_fn(fn, x, reps)}
+
+    return {
+        "jax_backend": jax.default_backend(),
+        "smoke": smoke,
+        "density": DENSITY,
+        "quant_bits": BITS,
+        "frames_per_cell": frames_per_cell,
+        "snr_grid": list(snr_grid),
+        "scenarios": list(SCENARIOS),
+        "golden_parity": parity,
+        "accuracy": accuracy,
+        "max_abs_logit_diff_fakequant_vs_fixed":
+            fixed_rep["agreement"]["max_abs_logit_diff"],
+        "throughput_batch": thr_batch,
+        "throughput": throughput,
+        "eval_wall_s": {"float": float_rep["wall_s_by_backend"],
+                        "fixed": fixed_rep["wall_s_by_backend"]},
+    }
+
+
+def format_table(res: dict) -> str:
+    lines = [
+        f"Fixed-point tier bench ({res['jax_backend']} backend, "
+        f"Q{res['quant_bits']}, {res['frames_per_cell']} frames/cell)",
+    ]
+    for bits, p in res["golden_parity"].items():
+        status = "BIT-EXACT" if p["bit_exact"] else \
+            f"MISMATCH (max |dint|={p['max_abs_int_diff']})"
+        lines.append(f"  golden parity {bits:<4s} "
+                     f"({p['n_frames']} frames): {status}")
+    lines.append(f"  fake-quant float vs fixed: max |dlogit| = "
+                 f"{res['max_abs_logit_diff_fakequant_vs_fixed']:.3g} "
+                 "(dequantized scale)")
+    lines.append("  scenario        SNR     acc(float)  acc(fixed)   delta")
+    for scen, rec in res["accuracy"].items():
+        for snr, cell in rec["per_snr"].items():
+            lines.append(f"  {scen:<15s}{snr:>5s}dB"
+                         f"{cell['float']:>12.3f}{cell['fixed']:>12.3f}"
+                         f"{cell['delta_fixed_vs_float']:>+9.3f}")
+        lines.append(f"  {scen:<15s} mean delta "
+                     f"{rec['mean_delta']:+.4f}  worst "
+                     f"{rec['worst_delta']:+.4f}")
+    fps = {b: t["fps"] for b, t in res["throughput"].items()}
+    lines.append("  throughput: " + "  ".join(
+        f"{b}={v:.0f} fps" for b, v in fps.items()))
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced cells/reps for CI smoke runs")
+    ap.add_argument("--out", default="BENCH_fixed.json")
+    args = ap.parse_args(argv)
+
+    res = run(smoke=args.smoke)
+    print(format_table(res))
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(res, indent=1, default=str))
+    print(f"wrote {out}")
+    if not all(p["bit_exact"] for p in res["golden_parity"].values()):
+        print("FAIL: fixed backend diverges from the golden datapath")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -58,6 +58,34 @@ def robustness_md() -> str:
     return "\n".join([head, sep] + rows) + tail
 
 
+def fixed_md() -> str:
+    """Digest of the fixed-point tier artifact: parity + accuracy deltas."""
+    res = _bench_json("fixed")
+    if res is None:
+        return "_no fixed-point bench artifact (run benchmarks/fixed_bench.py)_"
+    parity = "; ".join(
+        f"{bits}: {'bit-exact' if p['bit_exact'] else 'MISMATCH'}"
+        f" ({p['n_frames']} frames)"
+        for bits, p in res["golden_parity"].items())
+    snrs = res["snr_grid"]
+    head = ("| scenario | " + " | ".join(f"{s:+.0f} dB" for s in snrs)
+            + " | mean Δ |")
+    sep = "|---" * (len(snrs) + 2) + "|"
+    rows = []
+    for scen, rec in res["accuracy"].items():
+        cells = [rec["per_snr"][f"{s:+.1f}"]["delta_fixed_vs_float"]
+                 for s in snrs]
+        rows.append(f"| {scen} | "
+                    + " | ".join(f"{d:+.3f}" for d in cells)
+                    + f" | {rec['mean_delta']:+.4f} |")
+    tail = (f"\nGolden-datapath parity ({parity}); fixed-vs-float accuracy "
+            f"deltas at Q{res['quant_bits']}, max fake-quant-vs-fixed "
+            f"|dlogit| = "
+            f"{float(res['max_abs_logit_diff_fakequant_vs_fixed']):.3g} "
+            f"on the dequantized scale.")
+    return "\n".join([head, sep] + rows) + tail
+
+
 def _cells(mesh: str):
     out = []
     for f in sorted((DRY / mesh).glob("*.json")):
@@ -123,6 +151,7 @@ def main(argv=None) -> int:
     print(table)
     print("\n## Deployment\n\n" + deploy_md())
     print("\n## Channel robustness\n\n" + robustness_md())
+    print("\n## Fixed-point tier\n\n" + fixed_md())
     if args.write:
         p = pathlib.Path("EXPERIMENTS.md")
         txt = p.read_text()

@@ -21,6 +21,7 @@ def _modules(quick: bool):
     from . import (
         accuracy_sweep,
         deploy_bench,
+        fixed_bench,
         fusion_bench,
         kernel_bench,
         robustness_bench,
@@ -36,10 +37,11 @@ def _modules(quick: bool):
             table45_perf_model, kernel_bench, fusion_bench, roofline]
     if not quick:
         # several CPU-minutes each: training sweep, full 4096-frame serve
-        # run, the hot-swap-under-load deployment bench, and the
-        # scenario-robustness sweep across all four backends
+        # run, the hot-swap-under-load deployment bench, the
+        # scenario-robustness sweep across all four backends, and the
+        # float-vs-fixed fidelity sweep of the integer tier
         mods.extend([accuracy_sweep, serve_bench, deploy_bench,
-                     robustness_bench])
+                     robustness_bench, fixed_bench])
     return mods
 
 

@@ -30,6 +30,20 @@ pipeline — with optional per-layer backend assignment:
 
 New execution strategies plug in via ``register_backend`` without touching
 the model definition.
+
+The fixed-point tier serves genuinely integer inference bit-identical to
+the FPGA datapath's golden interpreter:
+
+    from repro.api import FixedQuantFn, build_golden
+
+    plan = compile_plan(program, params, masks=masks,
+                        quant_fn=FixedQuantFn(lsq_scales, bits=16),
+                        assignment="fixed")
+    int_logits = plan.bound.batch(fixed_encode_batch(iq, cfg.timesteps))
+    golden = build_golden(cfg, params, masks=masks,
+                          quant_fn=FixedQuantFn(lsq_scales, bits=16))
+    assert (np.asarray(int_logits) ==
+            np.stack([golden.forward_iq(f) for f in iq])).all()
 """
 from __future__ import annotations
 
@@ -69,6 +83,13 @@ from repro.channel import (
     make_frame_source,
 )
 from repro.eval import RobustnessConfig, evaluate_robustness
+from repro.fixed import (
+    FixedQuantFn,
+    build_golden,
+    fixed_encode_batch,
+    fixed_logit_scale,
+    quantize_codes,
+)
 
 __all__ = [
     # graph / program
@@ -105,4 +126,10 @@ __all__ = [
     "make_frame_source",
     "RobustnessConfig",
     "evaluate_robustness",
+    # fixed-point hardware-parity tier
+    "FixedQuantFn",
+    "build_golden",
+    "fixed_encode_batch",
+    "fixed_logit_scale",
+    "quantize_codes",
 ]

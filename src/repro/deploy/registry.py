@@ -377,11 +377,13 @@ class ModelRegistry:
             from repro.models.graph import compile_snn
             from repro.plan import compile_plan
 
-            quant_fn = None
-            if lsq_scales is not None:
-                from repro.train.lsq import make_serving_quant_fn
+            # same rule as the serve engines (repro.fixed.serving_quant_fn)
+            # so the prewarmed plan digest matches what a fixed-assignment
+            # bind_version will compile
+            from repro.fixed import serving_quant_fn
 
-                quant_fn = make_serving_quant_fn(lsq_scales, quant_bits)
+            quant_fn = serving_quant_fn(lsq_scales, quant_bits,
+                                        assignment=assignment)
             program = compile_snn(cfg)
             return compile_plan(program, params, masks=masks,
                                 quant_fn=quant_fn,

@@ -126,9 +126,23 @@ def evaluate_robustness(
     for backend in cfg.backends:
         plan = compile_plan(program, params, masks=masks, quant_fn=quant_fn,
                             assignment=backend)
-        steps[backend] = jax.jit(
-            lambda iq, p=plan: p.bound.batch(
-                sigma_delta_encode_batch(iq, model_cfg.timesteps)))
+        if backend == "fixed":
+            # the honest hardware path: integer Σ-Δ front end, integer
+            # logits dequantized back onto the float backends' logit scale
+            # (argmax-invariant) so cross-backend |dlogit| measures the
+            # genuine float-vs-fixed divergence
+            from repro.fixed import fixed_encode_batch, fixed_logit_scale
+
+            scale = fixed_logit_scale(params, model_cfg, masks=masks,
+                                      quant_fn=quant_fn)
+            steps[backend] = jax.jit(
+                lambda iq, p=plan, s=scale: p.bound.batch(
+                    fixed_encode_batch(iq, model_cfg.timesteps)
+                ).astype(jnp.float32) * s)
+        else:
+            steps[backend] = jax.jit(
+                lambda iq, p=plan: p.bound.batch(
+                    sigma_delta_encode_batch(iq, model_cfg.timesteps)))
 
     agreement = {"atol": cfg.agreement_atol, "max_abs_logit_diff": 0.0,
                  "worst_pair": None}

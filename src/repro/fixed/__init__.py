@@ -1,0 +1,48 @@
+"""Fixed-point hardware-parity tier (paper §IV-C): the ``fixed`` backend.
+
+Importing this package registers the ``fixed`` execution backend (integer
+inference: int weight codes, int32 accumulation, int16 saturating LIF
+membranes with shift-based leak, integer Sigma-Delta encoding) with the
+layer-graph registry.  ``repro.models.graph.get_backend`` imports it
+lazily, so ``backend="fixed"`` works without an explicit import.
+"""
+from repro.fixed import backend as _backend  # noqa: F401  (registers "fixed")
+from repro.fixed.encoder import (
+    fixed_encode_batch,
+    fixed_encode_frames,
+    fixed_sigma_delta_encode,
+)
+from repro.fixed.golden import GoldenNet, build_golden, golden_encode_frames
+from repro.fixed.quantize import (
+    FIXED_DEFAULT_BITS,
+    FixedLIF,
+    FixedQuantFn,
+    QuantizedLayer,
+    assignment_uses_fixed,
+    calibrate_step,
+    derive_fixed_layer,
+    fixed_logit_scale,
+    lif_to_fixed,
+    quantize_codes,
+    serving_quant_fn,
+)
+
+__all__ = [
+    "FIXED_DEFAULT_BITS",
+    "FixedLIF",
+    "FixedQuantFn",
+    "QuantizedLayer",
+    "GoldenNet",
+    "assignment_uses_fixed",
+    "build_golden",
+    "calibrate_step",
+    "derive_fixed_layer",
+    "fixed_encode_batch",
+    "fixed_encode_frames",
+    "fixed_logit_scale",
+    "fixed_sigma_delta_encode",
+    "golden_encode_frames",
+    "lif_to_fixed",
+    "quantize_codes",
+    "serving_quant_fn",
+]

@@ -1,0 +1,161 @@
+"""The ``fixed`` execution backend: genuinely integer inference (jnp).
+
+Runtime datapath (per timestep, mirrored op-for-op by the NumPy golden in
+:mod:`repro.fixed.golden` — keep the two in lockstep):
+
+conv/fc current:   int32 accumulation of int weight codes gated by binary
+                   input spikes (im2col matmul for conv, vector-matrix for
+                   FC) — code units.
+membrane update:   v32   = sign_extend(v16)
+                   v_dec = v32 - (v32 >> leak_shift)          (alpha decay)
+                   v_acc = v_dec + (current >> acc_shift)     (to membrane units)
+                   s     = (v_acc > vth)                      (strict compare)
+                   v16'  = sat16(v_acc - theta * s)           (soft reset +
+                                                              saturating write-back)
+
+Spikes are emitted as int32 {0, 1}; FC cells emit ``(spikes, currents)``
+with currents the raw int32 code-unit accumulators, so the common
+``current_sum`` readout produces int32 logits (one logit unit = the last
+FC layer's step size — see :func:`repro.fixed.quantize.fixed_logit_scale`).
+
+Like ``goap``/``stream``, binding needs **concrete** weights (codes are
+derived in NumPy); the bound cells are pure jnp integer ops — jit, vmap,
+``compile_plan`` and the fused streaming executor all apply.  The integer
+ops (matmul, shifts, compares, clips) are bit-deterministic, so jit vs
+eager and run-to-run results are identical — tests pin this against the
+golden interpreter.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.goap import build_shift_buffer
+from repro.core.saocds import pad_same
+from repro.fixed.quantize import (
+    I16_MAX,
+    I16_MIN,
+    FixedLIF,
+    derive_fixed_layer,
+    lif_to_fixed,
+)
+from repro.models.graph import (
+    KIND_CONV,
+    KIND_FC,
+    LayerCell,
+    _artifact,
+    _spikes_of,
+    register_backend,
+)
+
+__all__ = ["fixed_lif_step", "register"]
+
+
+class _LifConsts(NamedTuple):
+    leak: jax.Array   # int32 per-neuron leak shift
+    vth: jax.Array    # int32 threshold (membrane units)
+    theta: jax.Array  # int32 soft-reset (membrane units)
+    acc_shift: int    # python int: static shift amount
+
+
+def _lif_consts(flif: FixedLIF) -> _LifConsts:
+    return _LifConsts(leak=jnp.asarray(flif.leak_shift, jnp.int32),
+                      vth=jnp.asarray(flif.vth, jnp.int32),
+                      theta=jnp.asarray(flif.theta, jnp.int32),
+                      acc_shift=int(flif.acc_shift))
+
+
+def fixed_lif_step(v16: jax.Array, acc32: jax.Array, L: _LifConsts):
+    """One integer LIF update; returns (v16_next, spikes int32)."""
+    v32 = v16.astype(jnp.int32)
+    v_dec = v32 - (v32 >> L.leak)
+    v_acc = v_dec + (acc32 >> L.acc_shift)
+    s = (v_acc > L.vth).astype(jnp.int32)
+    v_next = jnp.clip(v_acc - L.theta * s, I16_MIN, I16_MAX).astype(jnp.int16)
+    return v_next, s
+
+
+def _concrete(spec, layer_params, mask):
+    """(w, mask) as numpy — the fixed backend quantizes at bind time."""
+    try:
+        w = np.asarray(layer_params["w"])
+        m = None if mask is None else np.asarray(mask)
+    except jax.errors.TracerArrayConversionError as e:
+        raise ValueError(
+            f"layer {spec.name!r}: the fixed backend derives integer codes "
+            "from concrete weights and cannot bind under jit/vmap/grad — "
+            "bind outside the traced region, then jit the bound program"
+        ) from e
+    return w, m
+
+
+def _quantized(spec, layer_params, mask, quant_fn, artifacts):
+    """The layer's QuantizedLayer (cached) + FixedLIF (always fresh).
+
+    Only the weight-derived codes go through the artifact store — the plan
+    compiler's layer keys hash effective weights but not LIF parameters,
+    so LIF-derived integers must be rebuilt per bind (cheap) from the
+    cached step.
+    """
+    w, m = _concrete(spec, layer_params, mask)
+    group = "conv" if spec.kind == KIND_CONV else "fc"
+    w_eff = None
+    if artifacts is not None and artifacts.get("w_eff") is not None:
+        w_eff = np.asarray(artifacts["w_eff"])
+    bits = getattr(quant_fn, "bits", None)
+    key = f"fixed_q{bits or 'cal'}"
+    ql = _artifact(artifacts, key, lambda: derive_fixed_layer(
+        group, spec.index, w, mask=m, quant_fn=quant_fn, w_eff=w_eff))
+    flif = lif_to_fixed(layer_params["lif"], ql.step)
+    return ql, flif
+
+
+def _fixed_conv(spec, layer_params, *, cfg, mask=None, quant_fn=None,
+                artifacts=None) -> LayerCell:
+    ql, flif = _quantized(spec, layer_params, mask, quant_fn, artifacts)
+    L = _lif_consts(flif)
+    kw, oc = spec.kw, spec.oc
+    # W'(OC, IC*KW) im2col layout, same as the dense oracle, in int32
+    wmat = jnp.asarray(
+        np.transpose(ql.codes, (2, 1, 0)).reshape(oc, -1).astype(np.int32))
+
+    def init_state(x_t):
+        return jnp.zeros((oc, x_t.shape[-1]), jnp.int16)
+
+    def step(v, x_t):
+        x = _spikes_of(x_t).astype(jnp.int32)
+        acc = wmat @ build_shift_buffer(pad_same(x, kw), kw)
+        return fixed_lif_step(v, acc, L)
+
+    return LayerCell(init_state=init_state, step=step)
+
+
+def _fixed_fc(spec, layer_params, *, cfg, mask=None, quant_fn=None,
+              artifacts=None) -> LayerCell:
+    ql, flif = _quantized(spec, layer_params, mask, quant_fn, artifacts)
+    L = _lif_consts(flif)
+    wmat = jnp.asarray(ql.codes.astype(np.int32))  # (DIN, DOUT)
+
+    def init_state(x_t):
+        return jnp.zeros((wmat.shape[1],), jnp.int16)
+
+    def step(v, x_t):
+        s_in = _spikes_of(x_t).reshape(-1).astype(jnp.int32)
+        cur = s_in @ wmat
+        v_next, out = fixed_lif_step(v, cur, L)
+        return v_next, (out, cur)
+
+    return LayerCell(init_state=init_state, step=step)
+
+
+def register() -> None:
+    """Register the fixed backend (idempotent; called lazily by get_backend)."""
+    register_backend("fixed", KIND_CONV, _fixed_conv)
+    register_backend("fixed", KIND_FC, _fixed_fc)
+
+
+register()

@@ -1,0 +1,52 @@
+"""Integer first-order Sigma-Delta encoder (Q0.15 accumulator).
+
+The float encoder (:mod:`repro.core.encoder`) integrates ``x - y`` in
+float32; the hardware front end quantizes the AGC-normalized input to
+Q0.15 once and runs the modulator entirely in integers:
+
+    x_q     = round(x * 2^15)           (x in [0, 1] after max-abs AGC)
+    integ  += x_q - y_prev * 2^15
+    y       = 1 if integ >= 2^14 else 0
+
+Normalization itself stays in float32 (it models the analog/AGC stage,
+not the digital modulator); everything after the single quantization is
+exact integer arithmetic, mirrored bit-for-bit by the NumPy golden in
+:mod:`repro.fixed.golden`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoder import normalize_iq
+
+__all__ = ["ENC_ONE", "ENC_HALF", "fixed_sigma_delta_encode",
+           "fixed_encode_frames", "fixed_encode_batch"]
+
+ENC_ONE = 1 << 15   # Q0.15 representation of 1.0
+ENC_HALF = 1 << 14  # comparator threshold (0.5)
+
+
+def fixed_sigma_delta_encode(x: jax.Array, osr: int) -> jax.Array:
+    """x (...,) in [0, 1]  ->  bits (osr, ...) int32 in {0, 1}."""
+    xq = jnp.round(x * float(ENC_ONE)).astype(jnp.int32)
+
+    def step(carry, _):
+        integ, y_prev = carry
+        integ = integ + xq - y_prev * ENC_ONE
+        y = (integ >= ENC_HALF).astype(jnp.int32)
+        return (integ, y), y
+
+    init = (jnp.zeros_like(xq), jnp.zeros_like(xq))
+    _, bits = jax.lax.scan(step, init, None, length=osr)
+    return bits
+
+
+def fixed_encode_frames(iq: jax.Array, osr: int) -> jax.Array:
+    """(..., 2, L) float I/Q -> (T=osr, ..., 2, L) int32 spike frames."""
+    return fixed_sigma_delta_encode(normalize_iq(iq), osr)
+
+
+def fixed_encode_batch(iq: jax.Array, osr: int) -> jax.Array:
+    """(B, 2, L) float I/Q -> (B, T, 2, L) int32 spike frames."""
+    return jnp.moveaxis(fixed_encode_frames(iq, osr), 0, 1)

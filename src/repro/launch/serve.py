@@ -68,11 +68,17 @@ def main(argv=None) -> int:
                     help="saocds-amc: async micro-batched tier or the "
                          "legacy per-chunk loop")
     ap.add_argument("--backend", default="auto",
-                    help="saocds-amc: execution backend, 'auto' to race the "
+                    help="saocds-amc: execution backend ('dense'/'goap'/"
+                         "'pallas'/'stream'/'fixed'), 'auto' to race the "
                          "candidates at bind time, or 'per-layer' to race "
                          "them layer by layer and serve the heterogeneous "
                          "assignment through the fused streaming plan "
-                         "(async engine only)")
+                         "(async engine only); 'fixed' serves genuinely "
+                         "integer inference (hardware-parity tier)")
+    ap.add_argument("--quant-bits", type=int, choices=(8, 16), default=None,
+                    help="saocds-amc: weight quantization width for the "
+                         "fixed/LSQ serving paths (default: the registry "
+                         "version's setting, else 16)")
     ap.add_argument("--max-delay-ms", type=float, default=5.0)
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--registry", default=None, metavar="DIR",
@@ -127,6 +133,13 @@ def main(argv=None) -> int:
                 return 1
             params = init_snn(jax.random.PRNGKey(0), SNN_CONFIG)
             masks = make_mask_pytree(params, args.density)
+        if args.quant_bits is not None:
+            quant_bits = args.quant_bits
+        if args.backend == "fixed":
+            src = "trained LSQ steps" if lsq_scales is not None else \
+                "max-abs calibration"
+            print(f"fixed-point tier: {quant_bits}-bit integer inference "
+                  f"({src})")
         iq, labels, _ = generate_batch(0, args.requests, snr_db=10.0,
                                        frame_len=SNN_CONFIG.input_width)
         if args.engine == "sync":

@@ -244,6 +244,19 @@ COMMON = "common"
 
 _REGISTRY: Dict[Tuple[str, str], BackendFactory] = {}
 
+# Backends that live in optional subpackages register on first use instead
+# of at import time (keeps repro.models.graph dependency-light).
+_LAZY_BACKENDS: Dict[str, str] = {"fixed": "repro.fixed.backend"}
+
+
+def _ensure_registered(name: Optional[str] = None) -> None:
+    import importlib
+
+    for lazy, module in _LAZY_BACKENDS.items():
+        if (name is None or name == lazy) and not any(
+                n == lazy for n, _ in _REGISTRY):
+            importlib.import_module(module)
+
 
 def register_backend(name: str, layer_kind: str, fn: BackendFactory) -> BackendFactory:
     """Register ``fn`` as backend ``name``'s implementation of ``layer_kind``."""
@@ -253,11 +266,13 @@ def register_backend(name: str, layer_kind: str, fn: BackendFactory) -> BackendF
 
 def available_backends() -> Tuple[str, ...]:
     """Names of all registered (non-common) backends."""
+    _ensure_registered()
     return tuple(sorted({n for n, _ in _REGISTRY if n != COMMON}))
 
 
 def get_backend(name: str, layer_kind: str) -> BackendFactory:
     """Resolve ``(name, layer_kind)``, falling back to the common pool."""
+    _ensure_registered(name)
     if name not in {n for n, _ in _REGISTRY}:
         raise ValueError(
             f"unknown backend {name!r}; registered backends: "

@@ -51,9 +51,15 @@ _CPU_CANDIDATES = ("dense", "goap")
 _TPU_CANDIDATES = ("dense", "goap", "pallas")
 
 
-def default_candidates() -> Tuple[str, ...]:
-    """Backends worth racing on this host."""
-    return _TPU_CANDIDATES if jax.default_backend() == "tpu" else _CPU_CANDIDATES
+def default_candidates(quantized: bool = False) -> Tuple[str, ...]:
+    """Backends worth racing on this host.
+
+    ``quantized=True`` (the engine passes it when LSQ state is present)
+    additionally races the integer ``fixed`` backend: quantized serving is
+    exactly when integer inference is a like-for-like candidate.
+    """
+    base = _TPU_CANDIDATES if jax.default_backend() == "tpu" else _CPU_CANDIDATES
+    return base + ("fixed",) if quantized else base
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +88,7 @@ def autotune_backend(
     batch_shape: Sequence[int],
     *,
     masks=None,
+    quant_fn=None,
     candidates: Optional[Sequence[str]] = None,
     reps: int = 2,
     budget_s: float = 5.0,
@@ -107,7 +114,12 @@ def autotune_backend(
     probe = jnp.zeros(tuple(batch_shape), jnp.float32)
     for name in candidates:
         try:
-            bound = program._bind(params, name, masks=masks)
+            if hasattr(quant_fn, "reset"):
+                # a candidate that raised mid-bind must not skew the next
+                # candidate's layer-order fake-quant index
+                quant_fn.reset()
+            bound = program._bind(params, name, masks=masks,
+                                  quant_fn=quant_fn)
             fn = jax.jit(bound.batch) if make_fn is None else make_fn(bound)
             timings[name] = _time_steady_state(fn, probe, reps, budget_s)
         except Exception as e:  # noqa: BLE001 — any failure disqualifies

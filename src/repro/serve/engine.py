@@ -176,13 +176,23 @@ def _fail_future(fut, err: BaseException) -> None:
         pass
 
 
-def _quant_fn_for(lsq_scales, quant_bits: int):
-    """Fresh per-bind fake-quant closure (None when not quantizing)."""
-    if lsq_scales is None:
-        return None
-    from repro.train.lsq import make_serving_quant_fn
+def _quant_fn_for(lsq_scales, quant_bits: int, backend=None):
+    """Fresh per-bind quant closure for a backend assignment.
 
-    return make_serving_quant_fn(lsq_scales, quant_bits)
+    Fixed assignments always get a :class:`repro.fixed.FixedQuantFn`
+    (which calibrates per layer when no LSQ state exists) so the integer
+    datapath has a step size to fold; float assignments keep the classic
+    behavior — trained fake-quant with LSQ state, None without.
+    """
+    from repro.fixed import serving_quant_fn
+
+    return serving_quant_fn(lsq_scales, quant_bits, assignment=backend)
+
+
+def _uses_fixed(backend) -> bool:
+    from repro.fixed import assignment_uses_fixed
+
+    return assignment_uses_fixed(backend)
 
 
 def count_batch_activity(stats: ServeStats, sparse, frames: np.ndarray,
@@ -239,9 +249,19 @@ class AMCServeEngine:
         # nothing (the software form of the paper's offline precomputation)
         self.plan = compile_plan(self.program, params, masks=masks,
                                  quant_fn=_quant_fn_for(lsq_scales,
-                                                        quant_bits),
+                                                        quant_bits,
+                                                        backend),
                                  assignment=backend)
         self._fwd = jax.jit(self.plan.bound.batch)
+
+    def _encode(self, chunk: np.ndarray) -> np.ndarray:
+        """Host-side Σ-Δ encode; the fixed backend gets the integer path."""
+        if _uses_fixed(self.backend):
+            from repro.fixed.golden import golden_encode_frames
+
+            return np.moveaxis(
+                golden_encode_frames(chunk, self.cfg.timesteps), 0, 1)
+        return sigma_delta_encode_np(chunk, self.cfg.timesteps)
 
     def classify(self, iq: np.ndarray) -> np.ndarray:
         """iq: (N, 2, L) -> predicted class ids (N,). Batches internally."""
@@ -253,7 +273,7 @@ class AMCServeEngine:
             pad = self.batch_size - chunk.shape[0]
             if pad:
                 chunk = np.concatenate([chunk, np.zeros((pad,) + chunk.shape[1:], chunk.dtype)])
-            frames = sigma_delta_encode_np(chunk, self.cfg.timesteps)
+            frames = self._encode(chunk)
             logits = np.asarray(self._fwd(jnp.asarray(frames)))
             n_real = self.batch_size - pad
             preds[s : s + n_real] = logits[:n_real].argmax(-1)
@@ -372,35 +392,49 @@ class AsyncAMCServeEngine:
             self.assignment = dict(self.perlayer.assignment)
             self.plan = compile_plan(self.program, params, masks=masks,
                                      quant_fn=_quant_fn_for(lsq_scales,
-                                                            quant_bits),
+                                                            quant_bits,
+                                                            self.assignment),
                                      assignment=self.assignment)
         elif backend == "auto":
             probe_shape = (self.batcher.max_batch, ic0, cfg.input_width)
+            if candidates is None and lsq_scales is not None:
+                # quantized serving: the integer `fixed` backend competes
+                from repro.serve.autotune import default_candidates
+
+                candidates = default_candidates(quantized=True)
 
             def make_fn(bound):  # memoize so the winner's compile is reused
                 fn = self._wrap_bound(bound)
                 raced_steps[bound.backend] = fn
                 return fn
 
+            # with LSQ state the race binds carry the fake-quant (or, for
+            # the fixed candidate, integer) weights so timings measure the
+            # quantized serving step that would actually run
             self.autotune = autotune_backend(
                 self.program, params, probe_shape, masks=masks,
+                quant_fn=_quant_fn_for(lsq_scales, quant_bits),
                 candidates=candidates, reps=autotune_reps, make_fn=make_fn)
             backend = self.autotune.choice
         self.backend = backend
         self.stats = ServeStats(backend=backend)
         if self.plan is not None:           # per-layer: fused streaming step
-            self._step = self._wrap_batch_fn(self.plan.batch)
+            self._step = self._wrap_batch_fn(
+                self.plan.batch, int_encode=_uses_fixed(self.assignment))
         elif backend in raced_steps and lsq_scales is None:
-            # reuse the race winner's compile (raced binds are built
-            # without fake-quant, so with LSQ state the winner is only a
-            # backend choice — the serving step is rebuilt quantized)
+            # reuse the race winner's compile (without LSQ state the race
+            # bind is the serving bind; with it the winner is only a
+            # backend choice — the serving step is rebuilt through the
+            # cached plan below so restarts stay near-free)
             self._step = raced_steps[backend]
-        else:                               # fixed backend: cached plan bind
+        else:                               # cached plan bind
             self.plan = compile_plan(self.program, params, masks=masks,
                                      quant_fn=_quant_fn_for(lsq_scales,
-                                                            quant_bits),
+                                                            quant_bits,
+                                                            backend),
                                      assignment=backend)
-            self._step = self._wrap_batch_fn(self.plan.bound.batch)
+            self._step = self._wrap_batch_fn(self.plan.bound.batch,
+                                             int_encode=_uses_fixed(backend))
 
         if warmup:  # pre-compile every bucket shape so serving never stalls
             for b in self.batcher.buckets:
@@ -433,17 +467,22 @@ class AsyncAMCServeEngine:
 
     # -- compiled step ------------------------------------------------------
 
-    def _wrap_batch_fn(self, batch_fn):
+    def _wrap_batch_fn(self, batch_fn, int_encode: bool = False):
         """Fuse Σ-Δ encode + forward (+ shard_map) under one jit.
 
         ``batch_fn``: (B, T, IC, L) spike frames -> (B, n_classes) logits —
         a bound program's layer-by-layer ``batch`` or an ExecutionPlan's
-        fused streaming ``batch``.
+        fused streaming ``batch``.  ``int_encode`` routes through the
+        integer Q0.15 Σ-Δ front end (the fixed tier's encoder).
         """
         osr = self.cfg.timesteps
+        if int_encode:
+            from repro.fixed import fixed_encode_batch as encode
+        else:
+            encode = sigma_delta_encode_batch
 
         def step(iq):  # (B, IC, L) raw I/Q -> (B, n_classes) logits
-            return batch_fn(sigma_delta_encode_batch(iq, osr))
+            return batch_fn(encode(iq, osr))
 
         if self.mesh is not None:
             from repro.distributed.sharding import shard_serve_fn
@@ -452,7 +491,8 @@ class AsyncAMCServeEngine:
         return jax.jit(step)
 
     def _wrap_bound(self, bound):
-        return self._wrap_batch_fn(bound.batch)
+        return self._wrap_batch_fn(bound.batch,
+                                   int_encode=_uses_fixed(bound.backend))
 
     # -- worker loop --------------------------------------------------------
 
@@ -579,9 +619,8 @@ class AsyncAMCServeEngine:
         """
         if backend is None:
             backend = self.backend
-        qfn = _quant_fn_for(lsq_scales,
-                            quant_bits if quant_bits is not None
-                            else self.quant_bits)
+        bits = quant_bits if quant_bits is not None else self.quant_bits
+        qfn = _quant_fn_for(lsq_scales, bits, backend)
         plan = None
         if backend == "per-layer":
             if not self.assignment:
@@ -592,18 +631,22 @@ class AsyncAMCServeEngine:
                     "backend='per-layer' requires an engine constructed "
                     "with backend='per-layer' (no autotuned assignment to "
                     "inherit); pass an explicit backend instead")
+            qfn = _quant_fn_for(lsq_scales, bits, self.assignment)
             plan = compile_plan(self.program, params, masks=masks,
                                 quant_fn=qfn, assignment=self.assignment)
-            step = self._wrap_batch_fn(plan.batch)
+            step = self._wrap_batch_fn(
+                plan.batch, int_encode=_uses_fixed(self.assignment))
         else:
             if backend == "auto":
                 ic0 = self.cfg.conv_specs[0][1]
                 probe = (self.batcher.max_batch, ic0, self.cfg.input_width)
                 backend = autotune_backend(self.program, params, probe,
                                            masks=masks).choice
+                qfn = _quant_fn_for(lsq_scales, bits, backend)
             plan = compile_plan(self.program, params, masks=masks,
                                 quant_fn=qfn, assignment=backend)
-            step = self._wrap_batch_fn(plan.bound.batch)
+            step = self._wrap_batch_fn(plan.bound.batch,
+                                       int_encode=_uses_fixed(backend))
         sparse = sparsify_params(params, masks) if self.count_activity else None
         if warmup:  # pre-compile every bucket so the flip never stalls
             ic0 = self.cfg.conv_specs[0][1]

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["lsq_fake_quant", "init_lsq_scales", "make_serving_quant_fn",
-           "quantize_to_int", "dequantize"]
+           "quantize_to_int", "dequantize", "STEP_FLOOR"]
 
 
 def _round_ste(x: jax.Array) -> jax.Array:
@@ -41,12 +41,22 @@ def lsq_fake_quant(w: jax.Array, step: jax.Array, bits: int = 16) -> jax.Array:
     return w_q * s
 
 
+STEP_FLOOR = 1e-8  # minimum usable step: keeps w/s finite for all-zero layers
+
+
 def init_lsq_scales(params: Dict, bits: int = 16) -> Dict:
-    """Per-layer initial step size: 2*mean|w| / sqrt(Q_max) (LSQ init)."""
+    """Per-layer initial step size: 2*mean|w| / sqrt(Q_max) (LSQ init).
+
+    Floored at :data:`STEP_FLOOR` so a fully-pruned / all-zero layer gets
+    a tiny-but-usable step instead of zero (the downstream ``w / s`` guard
+    only clamps at 1e-12 after the grad-scale trick, which explodes the
+    quotient instead of quantizing to zero codes).
+    """
     qmax = 2 ** (bits - 1) - 1
 
     def init_one(w):
-        return 2.0 * jnp.mean(jnp.abs(w)) / jnp.sqrt(jnp.asarray(qmax, jnp.float32))
+        s = 2.0 * jnp.mean(jnp.abs(w)) / jnp.sqrt(jnp.asarray(qmax, jnp.float32))
+        return jnp.maximum(s, STEP_FLOOR)
 
     return {
         "conv": [init_one(l["w"]) for l in params["conv"]],

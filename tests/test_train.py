@@ -153,6 +153,30 @@ def test_lsq_scales_init_structure():
     assert all(float(s) > 0 for s in scales["conv"] + scales["fc"])
 
 
+def test_lsq_scales_floor_on_all_zero_layer():
+    """A fully-pruned (all-zero) layer must not init a zero step.
+
+    ``init_lsq_scales`` derives each step from ``2*mean|w|/sqrt(qmax)``;
+    an all-zero weight gives step 0, and every downstream ``w / step``
+    (fake-quant, integer conversion) then emits NaN/inf.  The init floors
+    at ``STEP_FLOOR`` instead, so the degenerate layer quantizes to all
+    zeros without poisoning the pytree.
+    """
+    from repro.train.lsq import STEP_FLOOR
+
+    params = init_snn(jax.random.PRNGKey(0), SNNConfig())
+    params["conv"][1]["w"] = jnp.zeros_like(params["conv"][1]["w"])
+    scales = init_lsq_scales(params, bits=16)
+    for s in scales["conv"] + scales["fc"]:
+        # the floor lives in the pytree's float32 precision
+        assert np.isfinite(float(s)) and float(s) >= np.float32(STEP_FLOOR)
+    step = scales["conv"][1]
+    wq = lsq_fake_quant(params["conv"][1]["w"], step, bits=16)
+    assert np.all(np.isfinite(np.asarray(wq))) and not np.any(np.asarray(wq))
+    codes = quantize_to_int(params["conv"][1]["w"], step, bits=16)
+    assert not np.any(np.asarray(codes))
+
+
 # ---------------------------------------------------------------------------
 # sigma-delta encoder
 # ---------------------------------------------------------------------------
