@@ -1,0 +1,404 @@
+"""Fleet-tier benchmark: open-loop offered load against the replica router.
+
+Every serving number so far (``BENCH_serve.json``, ``BENCH_deploy.json``)
+came from a **closed-loop** driver: the generator waits for results, so
+the system can never be offered more load than it can serve and
+saturation behavior is invisible.  This bench is **open-loop**: a seeded
+Poisson arrival process submits at a configured *offered* rate whether or
+not the fleet keeps up — the honest way to measure tail latency, load
+shedding, and autoscaling.
+
+Three phases, all recorded into ``BENCH_fleet.json``:
+
+* **latency-vs-offered-load sweep** — a fixed single-replica fleet swept
+  across offered rates below and above its service capacity.  Below
+  saturation: zero shed, zero expired, flat p99.  Above: admission
+  control sheds at the door and served p99 stays bounded by the queue
+  cap — *shedding, not unbounded latency*;
+* **priority split** — the saturated points record per-class latency:
+  realtime dequeues ahead of bulk (weighted round-robin), so realtime
+  p99 stays strictly below bulk p99 under overload;
+* **autoscaler trace** — a 1-replica fleet under fixed offered load past
+  its capacity; the :class:`~repro.fleet.Autoscaler` observes the p99
+  breach/shedding and adds a replica, and the bench records p99 before
+  vs after the scale-up (the acceptance bar: adding a replica measurably
+  lowers p99 at fixed offered load).
+
+Per-replica capacity is set by the micro-batcher's **pace gate**
+(``max_batch / pace_ms``), not by host FLOPs: on a 1-core CI container
+the compute for this model is ~12% of a core per loaded replica, so
+capacity genuinely scales with the replica count the way it would across
+devices — the control plane is what is being measured, not the kernel.
+
+Run:  PYTHONPATH=src python benchmarks/fleet_bench.py [--smoke] [--out p]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+
+from repro.api import init_snn
+from repro.configs.saocds_amc import CONFIG as CFG
+from repro.fleet import Autoscaler, FleetRouter, ShedError, engine_factory
+from repro.serve import DeadlineExceeded
+from repro.train.pruning import make_mask_pytree
+
+NAME = "fleet_bench"
+
+DENSITY = 0.5
+MAX_BATCH = 8          # single bucket: every batch padded to 8
+PACE_MS = 40.0         # pace gate -> per-replica capacity = 8/0.040 = 200/s
+MAX_QUEUE = 48         # admission bound -> queueing delay capped ~240 ms
+MAX_DELAY_MS = 5.0
+DEADLINE_MS = 1500.0   # generous: shedding (not expiry) is the relief valve
+BULK_FRACTION = 0.25   # offered-traffic priority mix
+CAPACITY_RPS = MAX_BATCH / (PACE_MS / 1e3)
+
+
+def _fleet(params, masks, *, replicas: int, max_replicas: int,
+           shed_p99_ms: Optional[float] = None) -> FleetRouter:
+    factory = engine_factory(
+        params, CFG, masks=masks, backend="dense", buckets=[MAX_BATCH],
+        max_delay_ms=MAX_DELAY_MS, pace_ms=PACE_MS, max_queue=MAX_QUEUE,
+        warmup=True, count_activity=False)
+    return FleetRouter(factory, replicas=replicas, min_replicas=1,
+                       max_replicas=max_replicas,
+                       default_deadline_ms=DEADLINE_MS,
+                       shed_p99_ms=shed_p99_ms)
+
+
+def _frames(n: int = 64) -> np.ndarray:
+    rng = np.random.default_rng(0)
+    iq = rng.normal(size=(n, 2, CFG.input_width)).astype(np.float32)
+    return iq / np.sqrt(np.mean(iq**2, axis=(-2, -1), keepdims=True))
+
+
+def _pctl(values: List[float], q: float) -> float:
+    return float(np.percentile(values, q)) * 1e3 if values else 0.0
+
+
+class _Recorder:
+    """Thread-safe per-request outcome log (the harness's own clock)."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.rows: List[tuple] = []  # (priority, outcome, latency_s, t_done)
+
+    def add(self, priority: str, outcome: str, latency_s: float,
+            t_done: float) -> None:
+        with self.lock:
+            self.rows.append((priority, outcome, latency_s, t_done))
+
+    def __len__(self) -> int:
+        with self.lock:
+            return len(self.rows)
+
+
+def run_open_loop(fleet: FleetRouter, rate_rps: float, duration_s: float, *,
+                  seed: int, frames: np.ndarray,
+                  deadline_ms: float = DEADLINE_MS,
+                  bulk_fraction: float = BULK_FRACTION,
+                  drain_timeout_s: float = 30.0) -> Dict:
+    """Offer a seeded Poisson arrival stream; summarize the outcomes.
+
+    Open loop: arrival times are drawn up front (exponential gaps) and
+    requests are submitted on schedule regardless of completions.  Every
+    request resolves exactly one way — done, shed (at the door), expired
+    (deadline passed while queued), failed — via its future's callback.
+    """
+    rng = np.random.default_rng(seed)
+    n = max(1, int(round(rate_rps * duration_s)))
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+    is_bulk = rng.random(n) < bulk_fraction
+    rec = _Recorder()
+
+    t0 = time.perf_counter()
+    for i in range(n):
+        target = t0 + arrivals[i]
+        while True:
+            now = time.perf_counter()
+            if now >= target:
+                break
+            time.sleep(min(0.002, target - now))
+        priority = "bulk" if is_bulk[i] else "realtime"
+        t_sub = time.perf_counter()
+        try:
+            fut = fleet.submit(frames[i % len(frames)], priority=priority,
+                               deadline_ms=deadline_ms)
+        except ShedError as e:
+            rec.add(priority, f"shed:{e.reason}", 0.0, t_sub)
+            continue
+
+        def _done(f, t_sub=t_sub, priority=priority):
+            t_done = time.perf_counter()
+            if f.cancelled():
+                outcome = "cancelled"
+            else:
+                exc = f.exception()
+                if exc is None:
+                    outcome = "done"
+                elif isinstance(exc, DeadlineExceeded):
+                    outcome = "expired"
+                else:
+                    outcome = "failed"
+            rec.add(priority, outcome, t_done - t_sub, t_done)
+
+        fut.add_done_callback(_done)
+    t_last = time.perf_counter()
+
+    drain_by = t_last + drain_timeout_s
+    while len(rec) < n and time.perf_counter() < drain_by:
+        time.sleep(0.02)
+
+    with rec.lock:
+        rows = list(rec.rows)
+    outcomes: Dict[str, int] = {}
+    for _, outcome, _, _ in rows:
+        key = outcome.split(":")[0]
+        outcomes[key] = outcomes.get(key, 0) + 1
+    done = [(p, lat, td) for p, o, lat, td in rows if o == "done"]
+    lat_all = [lat for _, lat, _ in done]
+    lat_rt = [lat for p, lat, _ in done if p == "realtime"]
+    lat_bk = [lat for p, lat, _ in done if p == "bulk"]
+    n_shed = sum(v for k, v in outcomes.items() if k == "shed")
+    summary = {
+        "offered_rps": rate_rps,
+        "achieved_rps": n / max(1e-9, arrivals[-1]),
+        "duration_s": t_last - t0,
+        "n_requests": n,
+        "outcomes": outcomes,
+        "unresolved": n - len(rows),   # futures still pending at drain cap
+        "shed_rate": n_shed / n,
+        "expired_rate": outcomes.get("expired", 0) / n,
+        "served_rate": outcomes.get("done", 0) / n,
+        "latency_ms": {
+            "p50": _pctl(lat_all, 50), "p95": _pctl(lat_all, 95),
+            "p99": _pctl(lat_all, 99),
+            "realtime_p99": _pctl(lat_rt, 99),
+            "bulk_p99": _pctl(lat_bk, 99),
+        },
+        "_completions": [(lat, td) for _, lat, td in done],
+    }
+    return summary
+
+
+def _strip(point: Dict) -> Dict:
+    return {k: v for k, v in point.items() if not k.startswith("_")}
+
+
+def run_sweep(params, masks, rates: List[float], duration_s: float,
+              frames: np.ndarray) -> List[Dict]:
+    """Single-replica fleet swept across offered rates (fresh queue each)."""
+    points = []
+    with _fleet(params, masks, replicas=1, max_replicas=1) as fleet:
+        busy0 = 0.0
+        for i, rate in enumerate(rates):
+            point = run_open_loop(fleet, rate, duration_s,
+                                  seed=100 + i, frames=frames)
+            busy1 = fleet.signals()["busy_s"]
+            point["busy_s"] = round(busy1 - busy0, 3)
+            busy0 = busy1
+            points.append(_strip(point))
+            # let the backlog fully drain so points stay independent
+            fleet.batcher.drain_barrier(timeout=10.0)
+            time.sleep(3 * PACE_MS / 1e3)
+    return points
+
+
+def run_autoscale(params, masks, rate_rps: float, duration_s: float,
+                  frames: np.ndarray, max_replicas: int = 2,
+                  target_p99_ms: float = 150.0) -> Dict:
+    """Fixed offered load past one replica's capacity; autoscaler on.
+
+    The load runs on a background thread while the main thread ticks the
+    control loop; p99 is compared between completions before the first
+    scale-up and completions after it settled.
+    """
+    fleet = _fleet(params, masks, replicas=1, max_replicas=max_replicas)
+    scaler = Autoscaler(fleet, target_p99_ms=target_p99_ms,
+                        up_patience=1, down_patience=1_000_000,
+                        cooldown_ticks=2, interval_s=0.5)
+    result: Dict = {}
+
+    def load():
+        result.update(run_open_loop(fleet, rate_rps, duration_s, seed=777,
+                                    frames=frames))
+
+    t0 = time.perf_counter()
+    thread = threading.Thread(target=load, name="open-loop-load")
+    thread.start()
+    t_scale_up = None
+    while thread.is_alive():
+        time.sleep(scaler.interval_s)
+        tick = scaler.step()
+        if tick.action == "scale-up" and t_scale_up is None:
+            t_scale_up = time.perf_counter()
+    thread.join()
+    fleet.close()
+
+    completions = result.pop("_completions", [])
+    p99_before = p99_after = 0.0
+    settle_s = 1.0  # exclude the new replica's bind/warmup blip
+    if t_scale_up is not None:
+        before = [lat for lat, td in completions if td < t_scale_up]
+        after = [lat for lat, td in completions
+                 if td > t_scale_up + settle_s]
+        p99_before, p99_after = _pctl(before, 99), _pctl(after, 99)
+    shed_after = 0
+    for t in scaler.trace:
+        if t_scale_up is not None and t.t > t_scale_up + settle_s:
+            shed_after += t.shed_delta
+    return {
+        "offered_rps": rate_rps,
+        "target_p99_ms": target_p99_ms,
+        "single_replica_capacity_rps": CAPACITY_RPS,
+        "scaled_up": t_scale_up is not None,
+        "t_scale_up_s": (None if t_scale_up is None
+                         else round(t_scale_up - t0, 3)),
+        "p99_before_scale_up_ms": p99_before,
+        "p99_after_scale_up_ms": p99_after,
+        "shed_after_settle": shed_after,
+        "load": _strip(result),
+        "trace": scaler.trace_summary(),
+    }
+
+
+def run(smoke: bool = False) -> dict:
+    params = init_snn(jax.random.PRNGKey(0), CFG)
+    masks = make_mask_pytree(params, DENSITY)
+    frames = _frames()
+
+    mu = CAPACITY_RPS
+    if smoke:
+        # two replicas, low offered rates: exercises admission, priorities,
+        # deadlines, and the control loop inside CI's budget
+        rates = [0.2 * mu, 0.4 * mu]
+        duration, scale_duration = 1.5, 6.0
+    else:
+        rates = [0.3 * mu, 0.6 * mu, 0.85 * mu, 1.4 * mu, 2.0 * mu]
+        duration, scale_duration = 4.0, 12.0
+
+    sweep = run_sweep(params, masks, rates, duration, frames)
+    if smoke:
+        with _fleet(params, masks, replicas=2, max_replicas=2) as fleet:
+            two = run_open_loop(fleet, 0.5 * mu, duration, seed=9,
+                                frames=frames)
+            two_replica_point = _strip(two)
+    else:
+        two_replica_point = None
+    autoscale = run_autoscale(params, masks, rate_rps=1.5 * mu,
+                              duration_s=scale_duration, frames=frames)
+
+    return {
+        "smoke": smoke,
+        "jax_backend": jax.default_backend(),
+        "n_devices": jax.local_device_count(),
+        "config": {
+            "max_batch": MAX_BATCH, "pace_ms": PACE_MS,
+            "max_queue": MAX_QUEUE, "max_delay_ms": MAX_DELAY_MS,
+            "deadline_ms": DEADLINE_MS, "bulk_fraction": BULK_FRACTION,
+            "capacity_rps_per_replica": CAPACITY_RPS,
+        },
+        "sweep": sweep,
+        "two_replica_point": two_replica_point,
+        "autoscale": autoscale,
+    }
+
+
+def format_table(res: dict) -> str:
+    lines = [
+        f"Fleet bench ({res['n_devices']} {res['jax_backend']} device(s)); "
+        f"per-replica capacity {res['config']['capacity_rps_per_replica']:.0f} req/s "
+        f"(pace {res['config']['pace_ms']}ms x batch {res['config']['max_batch']})",
+        "  offered  served  shed   expired  p50      p99      rt-p99   bulk-p99",
+    ]
+    for p in res["sweep"]:
+        lat = p["latency_ms"]
+        lines.append(
+            f"  {p['offered_rps']:6.0f}/s {p['served_rate']:6.1%} "
+            f"{p['shed_rate']:6.1%} {p['expired_rate']:6.1%}  "
+            f"{lat['p50']:7.1f}  {lat['p99']:7.1f}  "
+            f"{lat['realtime_p99']:7.1f}  {lat['bulk_p99']:7.1f}")
+    a = res["autoscale"]
+    lines.append(
+        f"  autoscale @ {a['offered_rps']:.0f}/s offered: scaled_up="
+        f"{a['scaled_up']} at t={a['t_scale_up_s']}s  "
+        f"p99 {a['p99_before_scale_up_ms']:.1f}ms -> "
+        f"{a['p99_after_scale_up_ms']:.1f}ms  "
+        f"shed_after_settle={a['shed_after_settle']}")
+    for t in a["trace"]:
+        if t["action"] != "hold":
+            lines.append(f"    tick {t['tick']}: {t['action']} ({t['reason']})")
+    return "\n".join(lines)
+
+
+def check(res: dict) -> List[str]:
+    """Acceptance gates (non-smoke): the claims BENCH_fleet.json makes."""
+    problems = []
+    mu = res["config"]["capacity_rps_per_replica"]
+    for p in res["sweep"]:
+        sat = p["offered_rps"] > mu
+        if not sat and (p["shed_rate"] > 0 or p["expired_rate"] > 0):
+            problems.append(
+                f"shed/expiry below saturation ({p['offered_rps']:.0f}/s: "
+                f"shed {p['shed_rate']:.2%}, expired {p['expired_rate']:.2%})")
+        if sat and p["shed_rate"] == 0 and p["expired_rate"] == 0:
+            problems.append(
+                f"no shedding above saturation ({p['offered_rps']:.0f}/s)")
+        if sat and p["latency_ms"]["p99"] > 2.5 * res["config"]["deadline_ms"]:
+            problems.append(
+                f"unbounded latency above saturation "
+                f"(p99 {p['latency_ms']['p99']:.0f}ms)")
+        if sat and p["outcomes"].get("done", 0) >= 50 and not (
+                p["latency_ms"]["realtime_p99"]
+                < p["latency_ms"]["bulk_p99"]):
+            problems.append(
+                f"realtime p99 not below bulk p99 under saturation "
+                f"({p['latency_ms']['realtime_p99']:.1f} vs "
+                f"{p['latency_ms']['bulk_p99']:.1f}ms)")
+        if p["unresolved"]:
+            problems.append(
+                f"{p['unresolved']} futures never resolved "
+                f"({p['offered_rps']:.0f}/s point)")
+    a = res["autoscale"]
+    if not a["scaled_up"]:
+        problems.append("autoscaler never scaled up under overload")
+    elif not a["p99_after_scale_up_ms"] < a["p99_before_scale_up_ms"]:
+        problems.append(
+            f"adding a replica did not lower p99 "
+            f"({a['p99_before_scale_up_ms']:.1f} -> "
+            f"{a['p99_after_scale_up_ms']:.1f}ms)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="two replicas, low offered rates (CI)")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    args = ap.parse_args(argv)
+
+    res = run(smoke=args.smoke)
+    print(format_table(res))
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(res, indent=1, default=str))
+    print(f"wrote {out}")
+    if not args.smoke:
+        problems = check(res)
+        if problems:
+            print("FAIL:\n  " + "\n  ".join(problems))
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

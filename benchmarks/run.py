@@ -22,6 +22,7 @@ def _modules(quick: bool):
         accuracy_sweep,
         deploy_bench,
         fixed_bench,
+        fleet_bench,
         fusion_bench,
         kernel_bench,
         robustness_bench,
@@ -38,10 +39,11 @@ def _modules(quick: bool):
     if not quick:
         # several CPU-minutes each: training sweep, full 4096-frame serve
         # run, the hot-swap-under-load deployment bench, the
-        # scenario-robustness sweep across all four backends, and the
-        # float-vs-fixed fidelity sweep of the integer tier
+        # scenario-robustness sweep across all four backends, the
+        # float-vs-fixed fidelity sweep of the integer tier, and the
+        # open-loop fleet load/autoscaling harness
         mods.extend([accuracy_sweep, serve_bench, deploy_bench,
-                     robustness_bench, fixed_bench])
+                     robustness_bench, fixed_bench, fleet_bench])
     return mods
 
 

@@ -81,6 +81,21 @@ def main(argv=None) -> int:
                          "version's setting, else 16)")
     ap.add_argument("--max-delay-ms", type=float, default=5.0)
     ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="saocds-amc: replica groups behind a fleet router "
+                         "with join-shortest-queue dispatch and admission "
+                         "control (async engine only)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="saocds-amc: per-request latency budget; a request "
+                         "still queued past it fails fast instead of "
+                         "occupying a batch slot (async engine only)")
+    ap.add_argument("--priority", choices=["realtime", "bulk"],
+                    default="realtime",
+                    help="saocds-amc: dequeue class for the offered "
+                         "requests (realtime preempts bulk, weighted)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="saocds-amc: per-replica admission bound; submits "
+                         "beyond it are rejected (shed at the fleet door)")
     ap.add_argument("--registry", default=None, metavar="DIR",
                     help="saocds-amc: serve from a model registry instead "
                          "of fresh random weights")
@@ -143,6 +158,11 @@ def main(argv=None) -> int:
         iq, labels, _ = generate_batch(0, args.requests, snr_db=10.0,
                                        frame_len=SNN_CONFIG.input_width)
         if args.engine == "sync":
+            if args.replicas > 1 or args.deadline_ms is not None \
+                    or args.max_queue is not None:
+                print("--replicas/--deadline-ms/--max-queue require the "
+                      "async engine (--engine async)")
+                return 1
             backend = args.backend
             if backend in ("auto", "per-layer"):
                 print(f"(sync engine does not support --backend {backend}; "
@@ -155,17 +175,42 @@ def main(argv=None) -> int:
                                     quant_bits=quant_bits)
             preds = engine.classify(iq)
         else:
-            engine = AsyncAMCServeEngine(
-                params, SNN_CONFIG, masks=masks, backend=args.backend,
-                max_batch=args.batch, max_delay_ms=args.max_delay_ms,
-                workers=args.workers, count_activity=True,
+            # host-side activity counting is a power-model instrument; per
+            # batch it costs orders of magnitude more than the serving
+            # path itself, so the fleet/deadline tier (which measures
+            # serving latency) runs without it
+            engine_kwargs = dict(
+                backend=args.backend, max_batch=args.batch,
+                max_delay_ms=args.max_delay_ms, workers=args.workers,
+                max_queue=args.max_queue,
+                count_activity=(args.replicas == 1
+                                and args.deadline_ms is None),
                 version_label=version_label, lsq_scales=lsq_scales,
                 quant_bits=quant_bits)
-            if engine.autotune is not None:
+            if args.replicas > 1:
+                from repro.fleet import FleetRouter, engine_factory
+
+                engine = FleetRouter(
+                    engine_factory(params, SNN_CONFIG, masks=masks,
+                                   **engine_kwargs),
+                    replicas=args.replicas,
+                    max_replicas=max(args.replicas, 8),
+                    default_priority=args.priority,
+                    default_deadline_ms=args.deadline_ms)
+                print(f"fleet: {args.replicas} replicas, "
+                      f"join-shortest-queue dispatch"
+                      + (f", max_queue={args.max_queue}/replica"
+                         if args.max_queue else ""))
+            else:
+                engine = AsyncAMCServeEngine(params, SNN_CONFIG,
+                                             masks=masks, **engine_kwargs)
+            # autotune/per-layer reports exist on a single engine only;
+            # a fleet's replicas tune independently behind the router
+            if getattr(engine, "autotune", None) is not None:
                 t = ", ".join(f"{k}={v:.1f}ms"
                               for k, v in engine.autotune.timings_ms.items())
                 print(f"autotune[{t}] -> {engine.backend}")
-            if engine.perlayer is not None:
+            if getattr(engine, "perlayer", None) is not None:
                 a = ", ".join(f"{k}={v}"
                               for k, v in engine.assignment.items())
                 print(f"per-layer autotune -> [{a}] (fused streaming plan)")
@@ -185,13 +230,43 @@ def main(argv=None) -> int:
                                                     args.canary_pct))
                     print(f"canary: {clabel} at {args.canary_pct:.0f}% of "
                           "batches")
-            preds = engine.classify(iq)
+            if args.replicas > 1 or args.deadline_ms is not None:
+                # per-request collection: a blown deadline or a shed
+                # request is an outcome to report, not a driver crash
+                from repro.fleet import ShedError
+                from repro.serve import DeadlineExceeded, QueueFull
+
+                preds = np.full((args.requests,), -1, np.int32)
+                n_expired = n_shed = 0
+                futures = []
+                for i in range(args.requests):
+                    try:
+                        futures.append((i, engine.submit(
+                            iq[i], deadline_ms=args.deadline_ms,
+                            priority=args.priority)))
+                    except (ShedError, QueueFull):
+                        n_shed += 1
+                for i, fut in futures:
+                    try:
+                        preds[i] = fut.result(timeout=300.0)
+                    except DeadlineExceeded:
+                        n_expired += 1
+                if n_expired or n_shed:
+                    print(f"outcomes: {n_expired} expired, {n_shed} shed "
+                          f"of {args.requests}")
+            else:
+                preds = engine.classify(iq, priority=args.priority)
             for label, vstats in engine.version_stats().items():
                 marker = "*" if label == engine.active_version else " "
                 print(f"  {marker}{label:24s} backend={vstats.backend:9s} "
                       f"requests={vstats.requests:5d} "
                       f"batches={vstats.batches:4d} "
                       f"p99={vstats.p99_ms:.1f}ms")
+            if args.replicas > 1:
+                fs = engine.export_stats()
+                print(f"fleet: {fs['n_replicas']} replicas  "
+                      f"submitted={fs['n_submitted']} shed={fs['n_shed']} "
+                      f"expired={fs['n_expired']}")
             engine.close()
         st = engine.stats
         print(f"requests={st.requests} batches={st.batches} "

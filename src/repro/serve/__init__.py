@@ -7,7 +7,16 @@ from .autotune import (
     autotune_per_layer,
     default_candidates,
 )
-from .batcher import MicroBatch, MicroBatcher, Request, ServeFuture
+from .batcher import (
+    DEFAULT_PRIORITY_WEIGHTS,
+    PRIORITIES,
+    DeadlineExceeded,
+    MicroBatch,
+    MicroBatcher,
+    QueueFull,
+    Request,
+    ServeFuture,
+)
 from .engine import AMCServeEngine, AsyncAMCServeEngine, BoundVersion, ServeStats
 
 __all__ = [
@@ -19,6 +28,10 @@ __all__ = [
     "MicroBatch",
     "Request",
     "ServeFuture",
+    "DeadlineExceeded",
+    "QueueFull",
+    "PRIORITIES",
+    "DEFAULT_PRIORITY_WEIGHTS",
     "AutotuneReport",
     "PerLayerAutotuneReport",
     "autotune_backend",

@@ -14,7 +14,27 @@ Flush policy (the standard dynamic-batching trade-off):
   throughput-optimal;
 * **timeout flush** — ``max_delay`` elapsed since the batch started
   forming: ship what we have (padded up to the smallest covering bucket),
-  bounding added tail latency to ``max_delay`` under light traffic.
+  bounding added tail latency to ``max_delay`` under light traffic;
+* **pace gate** (``pace_ms > 0``) — consecutive flushes are at least
+  ``pace_ms`` apart, bounding batch-launch rate (the fleet tier uses this
+  as the per-replica service-rate cap; the batch keeps filling while the
+  gate holds, so pacing *improves* batching efficiency under load).
+
+The queue is **priority- and deadline-aware** (the fleet tier's request
+model):
+
+* requests carry a priority class (``realtime`` > ``bulk``); dequeue is
+  smooth-weighted round-robin across the non-empty classes, so under a
+  saturated queue realtime requests observe strictly lower queueing delay
+  while bulk traffic still drains (no starvation);
+* requests may carry an absolute deadline; an expired request **fails
+  fast** at dequeue time with :class:`DeadlineExceeded` instead of
+  occupying a micro-batch slot (likewise a request whose future was
+  cancelled is dropped without a slot);
+* ``max_queue`` bounds the backlog: ``submit`` raises :class:`QueueFull`
+  once the bound is hit — the admission-control primitive the fleet
+  router's load shedding builds on (shed at the door, never queue
+  unboundedly).
 
 ``MicroBatcher`` is transport-only — it knows nothing about models or
 backends; the engine's worker loops consume :class:`MicroBatch` objects
@@ -22,13 +42,13 @@ and resolve each request's :class:`ServeFuture`.
 """
 from __future__ import annotations
 
+import collections
 import concurrent.futures
 import dataclasses
 import itertools
-import queue
 import threading
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -36,10 +56,24 @@ __all__ = [
     "ServeFuture",
     "Request",
     "MicroBatch",
+    "DeadlineExceeded",
+    "QueueFull",
+    "PRIORITIES",
+    "DEFAULT_PRIORITY_WEIGHTS",
     "make_buckets",
     "bucket_for",
     "MicroBatcher",
 ]
+
+#: Priority classes, highest first.  ``realtime`` models the paper's
+#: streaming deployment (a frame is worthless once its decision window
+#: passes); ``bulk`` models offline re-scoring / shadow traffic.
+PRIORITIES: Tuple[str, ...] = ("realtime", "bulk")
+
+#: Default dequeue weights: under a saturated queue realtime receives
+#: ~8/9 of the batch slots, bulk the rest (weighted, not strict, so bulk
+#: can never starve).
+DEFAULT_PRIORITY_WEIGHTS: Dict[str, float] = {"realtime": 8.0, "bulk": 1.0}
 
 
 class ServeFuture(concurrent.futures.Future):
@@ -47,8 +81,17 @@ class ServeFuture(concurrent.futures.Future):
 
     Resolved by the engine's worker loop — ``result(timeout=...)`` blocks
     until the micro-batch containing this request has been served, or
-    raises the worker's exception / a shutdown ``RuntimeError``.
+    raises the worker's exception / a shutdown ``RuntimeError`` / a
+    :class:`DeadlineExceeded` if the request expired while queued.
     """
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline passed while it was still queued."""
+
+
+class QueueFull(RuntimeError):
+    """Admission rejected: the batcher's ``max_queue`` bound is hit."""
 
 
 @dataclasses.dataclass
@@ -59,6 +102,8 @@ class Request:
     iq: np.ndarray            # (IC, L) float32
     t_enqueue: float
     future: ServeFuture
+    deadline: Optional[float] = None   # absolute, on the batcher's clock
+    priority: str = "realtime"
 
 
 @dataclasses.dataclass
@@ -110,9 +155,7 @@ def bucket_for(n: int, buckets: Sequence[int]) -> int:
 
 
 class MicroBatcher:
-    """Bounded-delay dynamic micro-batcher over a thread-safe queue."""
-
-    _CLOSE = object()  # sentinel waking (and re-waking) worker loops
+    """Bounded-delay dynamic micro-batcher over priority-class queues."""
 
     def __init__(
         self,
@@ -121,6 +164,9 @@ class MicroBatcher:
         max_delay_ms: float = 5.0,
         buckets: Optional[Sequence[int]] = None,
         align: int = 1,
+        max_queue: Optional[int] = None,
+        priority_weights: Optional[Dict[str, float]] = None,
+        pace_ms: float = 0.0,
         clock=time.perf_counter,
     ):
         self.frame_shape = tuple(frame_shape)
@@ -139,42 +185,96 @@ class MicroBatcher:
                 f"buckets {self.buckets} must all be multiples of align={align}")
         self.max_batch = self.buckets[-1]
         self.max_delay_s = max_delay_ms / 1e3
+        self.max_queue = max_queue
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.pace_s = pace_ms / 1e3
+        weights = dict(priority_weights or DEFAULT_PRIORITY_WEIGHTS)
+        unknown = set(weights) - set(PRIORITIES)
+        if unknown:
+            raise ValueError(f"unknown priority classes {sorted(unknown)}; "
+                             f"valid: {PRIORITIES}")
+        if any(w <= 0 for w in weights.values()):
+            raise ValueError(f"priority weights must be > 0, got {weights}")
+        for p in PRIORITIES:  # every class dequeues even if not weighted
+            weights.setdefault(p, 1.0)
+        self._weights = weights
         self._clock = clock
-        self._q: "queue.Queue" = queue.Queue()
+        # one FIFO per priority class; dequeue interleaves them by smooth
+        # weighted round-robin (credit scheme, deterministic — no RNG)
+        self._pending: Dict[str, collections.deque] = {
+            p: collections.deque() for p in PRIORITIES}
+        self._credit: Dict[str, float] = {p: 0.0 for p in PRIORITIES}
         self._seq = itertools.count()
         self._last_seq = -1    # highest seq ever submitted
         self._handed_seq = -1  # highest seq handed to a consumer batch
         self._handed = threading.Condition()
         self._closed = False
-        # serializes submit vs close/drain: a submit either lands before
-        # the close sentinel (and is served or drained) or raises — no
-        # request can slip into the queue after drain() has emptied it
-        self._state_lock = threading.Lock()
+        # one lock/condition covers queue state, admission, the close flag
+        # and the pace gate: a submit either lands before close (and is
+        # served or drained) or raises — no request can slip into the
+        # queue after drain() has emptied it
+        self._cond = threading.Condition()
+        self._next_flush = 0.0  # pace gate: earliest next flush time
+        # counters (exact totals, exported by the engine's stats)
+        self.n_expired = 0     # requests failed fast on a passed deadline
+        self.n_rejected = 0    # submits refused by the max_queue bound
+        self.n_cancelled = 0   # cancelled futures dropped at dequeue
 
     # -- producer side ------------------------------------------------------
 
-    def submit(self, iq: np.ndarray) -> ServeFuture:
-        """Enqueue one (IC, L) frame; returns a future for its prediction."""
+    def now(self) -> float:
+        """The batcher's clock (deadlines are absolute on this clock)."""
+        return self._clock()
+
+    def submit(self, iq: np.ndarray, *, deadline: Optional[float] = None,
+               priority: str = "realtime") -> ServeFuture:
+        """Enqueue one (IC, L) frame; returns a future for its prediction.
+
+        ``deadline`` is absolute (``batcher.now() + budget_s``); ``None``
+        never expires.  Raises :class:`QueueFull` when the ``max_queue``
+        admission bound is hit — the caller (router) sheds instead of
+        queueing unboundedly.
+        """
         iq = np.asarray(iq, dtype=np.float32)
         if iq.shape != self.frame_shape:
             raise ValueError(
                 f"expected frame of shape {self.frame_shape}, got {iq.shape}")
-        with self._state_lock:
+        if priority not in self._pending:
+            raise ValueError(f"unknown priority {priority!r}; "
+                             f"valid: {PRIORITIES}")
+        with self._cond:
             if self._closed:
                 raise RuntimeError("MicroBatcher is closed")
+            if (self.max_queue is not None
+                    and self._depth_locked() >= self.max_queue):
+                self.n_rejected += 1
+                raise QueueFull(
+                    f"admission rejected: {self.max_queue} requests queued")
             fut = ServeFuture()
             seq = next(self._seq)
             self._last_seq = seq
-            self._q.put(Request(seq=seq, iq=iq,
-                                t_enqueue=self._clock(), future=fut))
+            self._pending[priority].append(
+                Request(seq=seq, iq=iq, t_enqueue=self._clock(), future=fut,
+                        deadline=deadline, priority=priority))
+            self._cond.notify()
         return fut
 
+    def _depth_locked(self) -> int:
+        return sum(len(d) for d in self._pending.values())
+
     def qsize(self) -> int:
-        return self._q.qsize()
+        with self._cond:
+            return self._depth_locked()
+
+    def qsizes(self) -> Dict[str, int]:
+        """Per-priority-class backlog snapshot."""
+        with self._cond:
+            return {p: len(d) for p, d in self._pending.items()}
 
     def drain_barrier(self, timeout: Optional[float] = None) -> bool:
         """Block until every request enqueued *before this call* has been
-        handed to a consumer batch; False on timeout.
+        handed to a consumer batch (or failed fast); False on timeout.
 
         This is the hot-swap drain point: after flipping the primary
         version, waiting on the barrier guarantees the pre-flip backlog
@@ -182,7 +282,7 @@ class MicroBatcher:
         served, never dropped).  Requests submitted after the call do not
         extend the wait.
         """
-        with self._state_lock:
+        with self._cond:
             target = self._last_seq
         deadline = None if timeout is None else self._clock() + timeout
         with self._handed:
@@ -195,11 +295,16 @@ class MicroBatcher:
                 self._handed.wait(timeout=remaining)
         return True
 
+    @property
+    def closed(self) -> bool:
+        with self._cond:
+            return self._closed
+
     def close(self) -> None:
         """Wake all worker loops; pending get_batch calls return None."""
-        with self._state_lock:
+        with self._cond:
             self._closed = True
-            self._q.put(self._CLOSE)
+            self._cond.notify_all()
 
     def drain(self) -> List[Request]:
         """Remove and return every still-queued request (after close).
@@ -207,17 +312,13 @@ class MicroBatcher:
         The engine resolves their futures with an error so no caller is
         left blocking on a request that will never be served.
         """
-        with self._state_lock:
+        with self._cond:
             if not self._closed:
                 raise RuntimeError("drain() is only valid after close()")
             pending: List[Request] = []
-            while True:
-                try:
-                    item = self._q.get_nowait()
-                except queue.Empty:
-                    break
-                if item is not self._CLOSE:
-                    pending.append(item)
+            for d in self._pending.values():
+                pending.extend(d)
+                d.clear()
             if pending:
                 # drained requests count as handled (their futures are
                 # failed by the engine), so a pending drain_barrier wakes
@@ -227,44 +328,145 @@ class MicroBatcher:
 
     # -- consumer side ------------------------------------------------------
 
+    def _pop_locked(self, expired: List[Request]) -> Optional[Request]:
+        """Pop the next live request by weighted priority; None if empty.
+
+        Expired requests are moved to ``expired`` (the caller fails their
+        futures *outside* the lock — future callbacks must never run under
+        it); cancelled futures are dropped on the spot.  Both count as
+        handed so drain barriers never wait on them.
+        """
+        now = self._clock()
+        while True:
+            avail = [p for p in PRIORITIES if self._pending[p]]
+            if not avail:
+                return None
+            if len(avail) == 1:
+                pick = avail[0]
+            else:
+                # smooth weighted round-robin (the nginx scheme): credit
+                # every non-empty class, pick the richest, debit it by the
+                # total — exactly proportional over any window, no bursts
+                total = 0.0
+                for p in avail:
+                    self._credit[p] += self._weights[p]
+                    total += self._weights[p]
+                pick = max(avail, key=lambda p: (self._credit[p],
+                                                 -PRIORITIES.index(p)))
+                self._credit[pick] -= total
+            r = self._pending[pick].popleft()
+            if r.future.cancelled():
+                self.n_cancelled += 1
+                self._mark_handed(r.seq)
+                continue
+            if r.deadline is not None and now > r.deadline:
+                self.n_expired += 1
+                self._mark_handed(r.seq)
+                expired.append(r)
+                continue
+            return r
+
     def get_batch(self, timeout: Optional[float] = None) -> Optional[MicroBatch]:
         """Block for the next batch; None on timeout or close.
 
-        Waits for a first request, then keeps draining the queue until the
-        batch is full (**size flush**) or ``max_delay`` has elapsed since
-        the batch started forming (**timeout flush**).
+        Waits for a first live request, then keeps draining the queues
+        until the batch is full (**size flush**) or ``max_delay`` has
+        elapsed since the batch started forming (**timeout flush**).  With
+        a pace gate the batch keeps filling until the gate opens, and
+        flushes are serialized at least ``pace_ms`` apart.
         """
+        expired: List[Request] = []
         try:
-            first = self._q.get(timeout=timeout)
-        except queue.Empty:
-            return None
-        if first is self._CLOSE:
-            self._q.put(self._CLOSE)  # re-wake sibling workers
-            return None
-        reqs = [first]
-        deadline = self._clock() + self.max_delay_s
-        while len(reqs) < self.max_batch:
-            remaining = deadline - self._clock()
-            if remaining <= 0:
-                break
-            try:
-                nxt = self._q.get(timeout=remaining)
-            except queue.Empty:
-                break
-            if nxt is self._CLOSE:
-                self._q.put(self._CLOSE)
-                break
-            reqs.append(nxt)
+            with self._cond:
+                wait_deadline = (None if timeout is None
+                                 else self._clock() + timeout)
+                while True:  # until a batch with >= 1 live request ships
+                    # -- phase 1: first live request (or timeout / close) ---
+                    while True:
+                        if self._closed:
+                            return None
+                        first = self._pop_locked(expired)
+                        if first is not None:
+                            break
+                        remaining = None
+                        if wait_deadline is not None:
+                            remaining = wait_deadline - self._clock()
+                            if remaining <= 0:
+                                return None
+                        self._cond.wait(timeout=remaining)
+                    # -- phase 2: gather until full / max_delay / pace ------
+                    reqs = [first]
+                    form_deadline = self._clock() + self.max_delay_s
+                    gather_deadline = max(form_deadline, self._next_flush)
+                    while not self._closed:
+                        now = self._clock()
+                        full = len(reqs) >= self.max_batch
+                        if now >= gather_deadline and not full:
+                            break
+                        if full and now >= self._next_flush:
+                            break
+                        if not full:
+                            nxt = self._pop_locked(expired)
+                            if nxt is not None:
+                                reqs.append(nxt)
+                                continue
+                        # full-but-paced waits for the gate; partial waits
+                        # for more requests (a submit notifies) or deadline
+                        until = self._next_flush if full else gather_deadline
+                        self._cond.wait(timeout=max(0.0, until - now))
+                    # -- phase 3: pace gate — serialize flushes -------------
+                    if self.pace_s > 0 and not self._closed:
+                        while True:
+                            now = self._clock()
+                            if now >= self._next_flush or self._closed:
+                                break
+                            self._cond.wait(timeout=self._next_flush - now)
+                    # flush-time recheck: forming/pacing can outlast a
+                    # deadline, and a gathered request may have expired or
+                    # been cancelled since it was popped — it must not ride
+                    # into the jitted step in a batch slot
+                    self._mark_handed(max(r.seq for r in reqs))
+                    now = self._clock()
+                    live = []
+                    for r in reqs:
+                        if r.future.cancelled():
+                            self.n_cancelled += 1
+                        elif r.deadline is not None and now > r.deadline:
+                            self.n_expired += 1
+                            expired.append(r)
+                        else:
+                            live.append(r)
+                    if live:
+                        reqs = live
+                        if self.pace_s > 0:
+                            # the pace slot is consumed only by a real
+                            # flush — all-expired rounds launch no compute
+                            self._next_flush = self._clock() + self.pace_s
+                        break
+                depth = self._depth_locked()
+        finally:
+            err = DeadlineExceeded("request deadline expired while queued")
+            for r in expired:
+                _fail_quietly(r.future, err)
         bucket = bucket_for(len(reqs), self.buckets)
         frames = np.zeros((bucket,) + self.frame_shape, dtype=np.float32)
         for i, r in enumerate(reqs):
             frames[i] = r.iq
-        self._mark_handed(max(r.seq for r in reqs))
         return MicroBatch(requests=reqs, bucket=bucket, frames=frames,
-                          queue_depth=self._q.qsize())
+                          queue_depth=depth)
 
     def _mark_handed(self, seq: int) -> None:
         with self._handed:
             if seq > self._handed_seq:
                 self._handed_seq = seq
             self._handed.notify_all()
+
+
+def _fail_quietly(fut, err: BaseException) -> None:
+    """set_exception tolerant of cancelled / already-resolved futures."""
+    if fut.done():
+        return
+    try:
+        fut.set_exception(err)
+    except Exception:  # noqa: BLE001 — lost a cancel race; nothing to do
+        pass

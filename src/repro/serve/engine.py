@@ -350,6 +350,9 @@ class AsyncAMCServeEngine:
         max_delay_ms: float = 5.0,
         buckets: Optional[Sequence[int]] = None,
         workers: int = 1,
+        max_queue: Optional[int] = None,
+        pace_ms: float = 0.0,
+        priority_weights=None,
         mesh=None,
         count_activity: bool = False,
         warmup: bool = True,
@@ -375,7 +378,9 @@ class AsyncAMCServeEngine:
         ic0 = cfg.conv_specs[0][1]
         self.batcher = MicroBatcher(
             frame_shape=(ic0, cfg.input_width), max_batch=max_batch,
-            max_delay_ms=max_delay_ms, buckets=buckets, align=align)
+            max_delay_ms=max_delay_ms, buckets=buckets, align=align,
+            max_queue=max_queue, pace_ms=pace_ms,
+            priority_weights=priority_weights)
 
         self.autotune: Optional[AutotuneReport] = None
         self.perlayer: Optional[PerLayerAutotuneReport] = None
@@ -456,6 +461,8 @@ class AsyncAMCServeEngine:
 
         self._lock = threading.Lock()
         self._t_first_enqueue = float("inf")  # start of the serving window
+        self._t_started = time.perf_counter()
+        self._busy_s = 0.0  # cumulative worker time spent serving batches
         self._stop = threading.Event()
         self._threads = [
             threading.Thread(target=self._worker, daemon=True,
@@ -521,6 +528,7 @@ class AsyncAMCServeEngine:
             batch = self.batcher.get_batch(timeout=0.1)
             if batch is None:
                 continue
+            t_busy0 = time.perf_counter()
             try:
                 # the version is pinned *per batch*: a hot-swap flipping
                 # the primary mid-service never retargets an in-flight
@@ -580,6 +588,9 @@ class AsyncAMCServeEngine:
                 # can never strand a future or kill the worker loop
                 for r in batch.requests:
                     _fail_future(r.future, e)
+            finally:
+                with self._lock:
+                    self._busy_s += time.perf_counter() - t_busy0
 
     # -- model lifecycle (deploy subsystem hooks) ---------------------------
 
@@ -694,22 +705,100 @@ class AsyncAMCServeEngine:
         """Install (or clear, with None) the per-batch version router."""
         self._router = router
 
+    # -- fleet-facing signals ----------------------------------------------
+
+    @property
+    def n_workers(self) -> int:
+        return len(self._threads)
+
+    @property
+    def busy_s(self) -> float:
+        """Cumulative worker seconds spent serving batches."""
+        with self._lock:
+            return self._busy_s
+
+    def utilization(self) -> float:
+        """Busy fraction of total worker capacity since construction.
+
+        The autoscaler prefers *windowed* utilization (deltas of
+        ``busy_s`` between control ticks); this cumulative form is the
+        zero-state fallback and what ``export_stats`` reports.
+        """
+        elapsed = time.perf_counter() - self._t_started
+        if elapsed <= 0:
+            return 0.0
+        return min(1.0, self.busy_s / (elapsed * self.n_workers))
+
+    def recent_latencies(self, k: int = 256) -> List[float]:
+        """Last ``k`` served-request latencies (seconds), oldest first."""
+        with self._lock:
+            return list(self.stats.latencies_s[-k:])
+
+    def export_stats(self) -> dict:
+        """Per-replica control-plane snapshot (what the fleet aggregates).
+
+        Extends ``stats.summary()`` with the live queue/admission signals
+        the router and autoscaler act on: current queue depth, expired /
+        rejected / cancelled totals from the batcher, and worker
+        utilization.
+        """
+        s = self.stats.summary()
+        s.update({
+            "queue_depth": self.batcher.qsize(),
+            "queue_depths_by_priority": self.batcher.qsizes(),
+            "n_expired": self.batcher.n_expired,
+            "n_rejected": self.batcher.n_rejected,
+            "n_cancelled": self.batcher.n_cancelled,
+            "workers": self.n_workers,
+            "busy_s": self.busy_s,
+            "utilization": self.utilization(),
+            "active_version": self.active_version,
+        })
+        return s
+
     # -- public API ---------------------------------------------------------
 
-    def submit(self, iq: np.ndarray):
-        """Enqueue one (2, L) frame; returns a ``ServeFuture``."""
-        return self.batcher.submit(iq)
+    def submit(self, iq: np.ndarray, *, deadline_ms: Optional[float] = None,
+               priority: str = "realtime"):
+        """Enqueue one (2, L) frame; returns a ``ServeFuture``.
 
-    def classify(self, iq: np.ndarray, timeout: float = 300.0) -> np.ndarray:
+        ``deadline_ms`` is a relative latency budget: a request still
+        queued when it expires fails fast with ``DeadlineExceeded``
+        instead of occupying a micro-batch slot.  ``priority`` picks the
+        dequeue class (``realtime`` > ``bulk``, weighted).
+        """
+        deadline = (None if deadline_ms is None
+                    else self.batcher.now() + deadline_ms / 1e3)
+        return self.batcher.submit(iq, deadline=deadline, priority=priority)
+
+    def classify(self, iq: np.ndarray, timeout: float = 300.0, *,
+                 deadline_ms: Optional[float] = None,
+                 priority: str = "realtime") -> np.ndarray:
         """Blocking convenience wrapper: (N, 2, L) -> class ids (N,).
 
         ``stats.wall_s`` is maintained by the worker loop as the serving
         window (first enqueue -> latest completion), so it is consistent
         whether requests arrive through here or through ``submit()``.
+
+        On timeout (or any per-request failure) the outstanding futures
+        are cancelled before the error propagates — an abandoned classify
+        call never leaks still-pending requests into the batcher (the
+        dequeue path drops cancelled futures without giving them a batch
+        slot).  Requests already inside an in-flight batch complete
+        normally; their results are simply discarded.
         """
-        futures = [self.submit(iq[i]) for i in range(iq.shape[0])]
-        return np.asarray([f.result(timeout=timeout) for f in futures],
-                          dtype=np.int32)
+        futures = [self.submit(iq[i], deadline_ms=deadline_ms,
+                               priority=priority)
+                   for i in range(iq.shape[0])]
+        out = np.empty((len(futures),), dtype=np.int32)
+        try:
+            for i, f in enumerate(futures):
+                out[i] = f.result(timeout=timeout)
+        except BaseException:
+            for f in futures:
+                f.cancel()  # no-op for done/running futures
+            raise
+        return out
 
     def close(self) -> None:
         """Stop the workers; no future is ever left unresolved.

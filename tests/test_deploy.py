@@ -7,6 +7,7 @@ Tiny reduced config throughout (same as test_serve) so binds stay cheap.
 import dataclasses
 import tempfile
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -211,15 +212,32 @@ def test_hot_swap_under_concurrent_load_zero_failures(models):
                 rng.normal(size=FRAME_SHAPE).astype(np.float32))
             with lock:
                 futures.append(f)
+            # pace the offered load below serving capacity: unpaced tight
+            # loops on a 1-core host grow the backlog without bound, and
+            # the post-flip drain can then never finish inside its budget
+            time.sleep(0.001)
 
     threads = [threading.Thread(target=pump, args=(i,)) for i in range(3)]
     for t in threads:
         t.start()
     try:
-        while len(futures) < 64:  # ensure in-flight traffic at the flip
-            pass
+        # ensure in-flight traffic at the flip AND that v1 has actually
+        # served (a busy-spin here starves the worker on 1-core hosts,
+        # letting the flip land before v1's first batch completes)
+        deadline = time.perf_counter() + 60.0
+        while ((len(futures) < 64 or engine.stats.requests == 0)
+               and time.perf_counter() < deadline):
+            time.sleep(0.001)
+        assert engine.stats.requests > 0, "v1 never served before the flip"
         report = hot_swap(engine, p2, label="v2", backend="dense",
                           drain_timeout=30.0)
+        # keep traffic flowing until the new primary has demonstrably
+        # served (the barrier just drained the backlog, so stopping the
+        # producers at the flip can leave v2 with zero requests)
+        deadline = time.perf_counter() + 60.0
+        while (engine.version_stats()["v2"].requests == 0
+               and time.perf_counter() < deadline):
+            time.sleep(0.001)
     finally:
         stop.set()
         for t in threads:

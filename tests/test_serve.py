@@ -4,6 +4,7 @@ fallback, percentile math, activity counting.
 Tiny reduced config throughout so binds/compiles stay cheap; timing
 assertions use generous margins (CI containers jitter).
 """
+import threading
 import time
 
 import numpy as np
@@ -18,6 +19,7 @@ from repro.serve import (
     AMCServeEngine,
     AsyncAMCServeEngine,
     MicroBatcher,
+    QueueFull,
     ServeStats,
     autotune_backend,
 )
@@ -366,3 +368,178 @@ def test_stats_summary_roundtrips_to_json():
     assert d["requests"] == 3
     assert d["backend_batch_counts"] == {"dense": 1}
     assert d["throughput_fps"] == pytest.approx(6.0)
+
+
+# ---------------------------------------------------------------------------
+# ServeStats edge cases: empty/singleton histories, zero elapsed time
+# ---------------------------------------------------------------------------
+
+def test_stats_empty_histories_stay_finite():
+    import json
+
+    st = ServeStats()
+    assert st.latency_percentile(99.0) == 0.0
+    assert st.p50_ms == st.p95_ms == st.p99_ms == 0.0
+    assert st.mean_queue_depth() == 0.0
+    assert st.throughput_fps() == 0.0
+    assert st.throughput_samples_per_s() == 0.0
+    d = json.loads(json.dumps(st.summary()))
+    for key, val in d.items():
+        if isinstance(val, (int, float)):
+            assert np.isfinite(val), f"{key} not finite on empty stats"
+
+
+def test_stats_singleton_latency_percentiles():
+    st = ServeStats()
+    st.record_latencies([0.004])
+    # one sample: every percentile is that sample, no interpolation NaNs
+    for q in (0.0, 50.0, 99.0, 100.0):
+        assert st.latency_percentile(q) == pytest.approx(0.004)
+    assert st.p50_ms == st.p99_ms == pytest.approx(4.0)
+
+
+def test_stats_zero_elapsed_throughput_is_zero():
+    # requests recorded but no wall time yet (first batch still in
+    # flight): throughput must report 0.0, never divide by zero
+    st = ServeStats(requests=10, wall_s=0.0)
+    assert st.throughput_fps() == 0.0
+    assert st.throughput_samples_per_s() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# classify() abandonment: timeouts must not leak futures into the batcher
+# ---------------------------------------------------------------------------
+
+def test_classify_timeout_cancels_queued_futures(setup):
+    _, params, masks = setup
+    # max_delay far beyond the classify timeout and a 64-wide bucket:
+    # the 4 submitted frames just sit queued, so the timeout must fire
+    # with every future still pending
+    eng = AsyncAMCServeEngine(params, CFG, masks=masks, backend="dense",
+                              max_delay_ms=60_000.0, warmup=False)
+    captured = []
+    orig_submit = eng.submit
+
+    def recording_submit(iq, **kw):
+        fut = orig_submit(iq, **kw)
+        captured.append(fut)
+        return fut
+
+    eng.submit = recording_submit
+    try:
+        # on 3.10 concurrent.futures.TimeoutError is not yet the builtin
+        import concurrent.futures
+
+        with pytest.raises((TimeoutError, concurrent.futures.TimeoutError)):
+            eng.classify(_iq(4), timeout=0.2)
+        # regression: classify used to return leaving its requests queued
+        # forever; now every outstanding future is cancelled, and the
+        # dequeue path drops cancelled requests without a batch slot
+        assert len(captured) == 4
+        assert all(f.done() for f in captured)
+        assert all(f.cancelled() for f in captured)
+    finally:
+        eng.close()
+    assert eng.stats.requests == 0
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher concurrency stress (slow: excluded from default tier-1)
+# ---------------------------------------------------------------------------
+
+def _stress_round(seed: int) -> None:
+    """Producers, consumers, and a chaos thread hammer one batcher.
+
+    The invariant under test: every submitted future resolves exactly
+    once (result, error, cancel — any is fine; zero or double is a bug),
+    no matter how submits race expiry, cancellation, drain barriers, and
+    close. Done-callbacks fire once per future by contract, so counting
+    them counts resolutions.
+    """
+    rng = np.random.default_rng(seed)
+    mb = MicroBatcher(FRAME_SHAPE, max_batch=4,
+                      max_delay_ms=float(rng.choice([0.2, 1.0, 5.0])),
+                      max_queue=32,
+                      pace_ms=float(rng.choice([0.0, 0.5])))
+    errors, resolved, futures = [], [], []
+    lock = threading.Lock()
+    frame = _iq(1)[0]
+
+    def producer(t):
+        prng = np.random.default_rng(seed * 100 + t)
+        for _ in range(30):
+            try:
+                fut = mb.submit(
+                    frame,
+                    priority="bulk" if prng.random() < 0.4 else "realtime",
+                    deadline=(mb.now() + 1e-4 if prng.random() < 0.2
+                              else None))
+            except QueueFull:
+                continue
+            except RuntimeError:
+                return          # racing close(): valid terminal state
+            fut.add_done_callback(lambda f: resolved.append(1))
+            with lock:
+                futures.append(fut)
+            if prng.random() < 0.1:
+                fut.cancel()
+            if prng.random() < 0.3:
+                time.sleep(prng.random() * 1e-3)
+
+    def consumer():
+        try:
+            while True:
+                batch = mb.get_batch(timeout=0.02)
+                if batch is None:
+                    if mb.closed:
+                        return
+                    continue
+                for req in batch.requests:
+                    try:
+                        req.future.set_result(0)
+                    except Exception:   # lost a cancel race: fine
+                        pass
+        except Exception as exc:  # noqa: BLE001 — fail the test, not the thread
+            errors.append(exc)
+
+    def chaos():
+        for _ in range(10):
+            mb.qsize()
+            mb.qsizes()
+            mb.drain_barrier(timeout=0.005)
+
+    threads = ([threading.Thread(target=producer, args=(t,))
+                for t in range(3)]
+               + [threading.Thread(target=consumer) for _ in range(2)]
+               + [threading.Thread(target=chaos)])
+    for th in threads[:3] + threads[5:]:
+        th.start()
+    for th in threads[3:5]:
+        th.start()
+    for th in threads[:3] + threads[5:]:
+        th.join(timeout=30.0)
+    mb.drain_barrier(timeout=5.0)
+    mb.close()
+    for th in threads[3:5]:
+        th.join(timeout=30.0)
+    # anything still queued at close is failed, exactly as the engine does
+    err = RuntimeError("closed")
+    for req in mb.drain():
+        if not req.future.done():
+            try:
+                req.future.set_exception(err)
+            except Exception:
+                pass
+    assert not errors, errors
+    deadline = time.perf_counter() + 5.0
+    while len(resolved) < len(futures) and time.perf_counter() < deadline:
+        time.sleep(0.005)
+    assert all(f.done() for f in futures), "unresolved futures leaked"
+    assert len(resolved) == len(futures), (
+        f"{len(futures)} futures but {len(resolved)} resolutions")
+
+
+@pytest.mark.slow
+def test_batcher_concurrency_stress_50_seeds():
+    for seed in range(50):
+        _stress_round(seed)
