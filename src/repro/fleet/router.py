@@ -44,7 +44,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.serve.batcher import PRIORITIES, QueueFull
+from repro.serve.batcher import PRIORITIES, EngineClosed, QueueFull
 from repro.serve.engine import ServeStats
 
 __all__ = ["ShedError", "Replica", "FleetRouter", "engine_factory",
@@ -66,11 +66,22 @@ class ShedError(RuntimeError):
 
 @dataclasses.dataclass
 class Replica:
-    """One replica group: a name, its engine, and its birth order."""
+    """One replica group: a name, its engine, and its birth order.
+
+    ``fenced``/``gate`` implement the retirement fence: ``submit`` checks
+    the flag and enqueues while holding ``gate``, and ``scale_down`` sets
+    the flag under the same gate before draining — so once the fence is
+    up, no request (not even one whose replica-list snapshot predates the
+    retirement) can slip into the replica's queue behind the drain
+    barrier.
+    """
 
     name: str
     engine: Any
     index: int
+    fenced: bool = False
+    gate: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
 
 
 def engine_factory(params, cfg, masks=None, **engine_kwargs):
@@ -278,6 +289,15 @@ class FleetRouter:
                 if len(self._replicas) <= self.min_replicas:
                     return None
                 rep = self._replicas.pop()  # youngest: cheapest to retire
+            # fence: a concurrent submit that snapshotted the replica list
+            # before the pop could still enqueue here.  Submits check
+            # ``fenced`` and enqueue under ``rep.gate``, so acquiring the
+            # gate to raise the flag (a) waits out any submit that already
+            # passed the check — its request lands before the barrier's
+            # seq snapshot — and (b) guarantees later submits skip this
+            # replica.  Only then is the drain target captured.
+            with rep.gate:
+                rep.fenced = True
             rep.engine.batcher.drain_barrier(timeout=drain_timeout)
             rep.engine.close()
             with self._lock:
@@ -321,14 +341,20 @@ class FleetRouter:
         order = sorted(reps, key=lambda r: (r.engine.batcher.qsize(),
                                             r.index))
         for rep in order:
-            try:
-                fut = rep.engine.submit(iq, deadline_ms=deadline_ms,
-                                        priority=priority)
-            except QueueFull:
-                continue
-            except RuntimeError:
-                continue  # replica mid-retirement: closed between list
-                # snapshot and submit — the next candidate takes it
+            # check-and-enqueue under the replica's retirement gate: once
+            # scale_down raises the fence, no submit — even one holding a
+            # pre-retirement list snapshot — can land a request behind the
+            # drain barrier.  EngineClosed (a fleet close racing this
+            # snapshot) likewise skips to the next candidate; any other
+            # error is a real engine fault and propagates.
+            with rep.gate:
+                if rep.fenced:
+                    continue
+                try:
+                    fut = rep.engine.submit(iq, deadline_ms=deadline_ms,
+                                            priority=priority)
+                except (QueueFull, EngineClosed):
+                    continue
             with self._lock:
                 self.n_submitted += 1
             return fut
@@ -501,6 +527,9 @@ class FleetRouter:
                 reps = list(self._replicas)
                 self._replicas = []
                 self._retired.extend(reps)
+            for rep in reps:       # fence first: a submit racing shutdown
+                with rep.gate:     # sheds at the door instead of landing
+                    rep.fenced = True  # a request the close will fail
             for rep in reps:
                 rep.engine.close()
 

@@ -11,6 +11,7 @@ from .batcher import (
     DEFAULT_PRIORITY_WEIGHTS,
     PRIORITIES,
     DeadlineExceeded,
+    EngineClosed,
     MicroBatch,
     MicroBatcher,
     QueueFull,
@@ -30,6 +31,7 @@ __all__ = [
     "ServeFuture",
     "DeadlineExceeded",
     "QueueFull",
+    "EngineClosed",
     "PRIORITIES",
     "DEFAULT_PRIORITY_WEIGHTS",
     "AutotuneReport",

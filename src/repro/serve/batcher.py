@@ -45,10 +45,11 @@ from __future__ import annotations
 import collections
 import concurrent.futures
 import dataclasses
+import heapq
 import itertools
 import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -58,6 +59,7 @@ __all__ = [
     "MicroBatch",
     "DeadlineExceeded",
     "QueueFull",
+    "EngineClosed",
     "PRIORITIES",
     "DEFAULT_PRIORITY_WEIGHTS",
     "make_buckets",
@@ -92,6 +94,15 @@ class DeadlineExceeded(RuntimeError):
 
 class QueueFull(RuntimeError):
     """Admission rejected: the batcher's ``max_queue`` bound is hit."""
+
+
+class EngineClosed(RuntimeError):
+    """Submit refused: the batcher (and the engine over it) has closed.
+
+    A dedicated type so callers that route around a retiring replica (the
+    fleet router) can distinguish "this engine is shutting down — try the
+    next one" from a genuine engine fault, which must propagate.
+    """
 
 
 @dataclasses.dataclass
@@ -207,7 +218,15 @@ class MicroBatcher:
         self._credit: Dict[str, float] = {p: 0.0 for p in PRIORITIES}
         self._seq = itertools.count()
         self._last_seq = -1    # highest seq ever submitted
-        self._handed_seq = -1  # highest seq handed to a consumer batch
+        # exact un-handed tracking for drain_barrier.  A high-water-mark
+        # seq is NOT enough: weighted round-robin dequeues realtime ahead
+        # of bulk, so a high realtime seq can be handed while lower-seq
+        # bulk requests are still queued.  Min-heap of un-handed seqs with
+        # lazy deletion (seqs handed out of order park in _handed_out_of_
+        # order until they surface at the heap top); both structures are
+        # bounded by the live backlog.
+        self._unhanded: List[int] = []
+        self._handed_out_of_order: set = set()
         self._handed = threading.Condition()
         self._closed = False
         # one lock/condition covers queue state, admission, the close flag
@@ -245,7 +264,7 @@ class MicroBatcher:
                              f"valid: {PRIORITIES}")
         with self._cond:
             if self._closed:
-                raise RuntimeError("MicroBatcher is closed")
+                raise EngineClosed("MicroBatcher is closed")
             if (self.max_queue is not None
                     and self._depth_locked() >= self.max_queue):
                 self.n_rejected += 1
@@ -254,6 +273,8 @@ class MicroBatcher:
             fut = ServeFuture()
             seq = next(self._seq)
             self._last_seq = seq
+            with self._handed:
+                heapq.heappush(self._unhanded, seq)
             self._pending[priority].append(
                 Request(seq=seq, iq=iq, t_enqueue=self._clock(), future=fut,
                         deadline=deadline, priority=priority))
@@ -281,12 +302,17 @@ class MicroBatcher:
         has been batched (on the old or new plan — either way it will be
         served, never dropped).  Requests submitted after the call do not
         extend the wait.
+
+        The wait is on *every* seq <= the snapshot, not a high-water
+        mark: priority dequeue hands requests out of seq order, so the
+        barrier holds until the smallest un-handed seq moves past the
+        target.
         """
         with self._cond:
             target = self._last_seq
         deadline = None if timeout is None else self._clock() + timeout
         with self._handed:
-            while self._handed_seq < target:
+            while self._unhanded and self._unhanded[0] <= target:
                 remaining = None
                 if deadline is not None:
                     remaining = deadline - self._clock()
@@ -323,7 +349,7 @@ class MicroBatcher:
                 # drained requests count as handled (their futures are
                 # failed by the engine), so a pending drain_barrier wakes
                 # instead of waiting on requests that will never batch
-                self._mark_handed(max(r.seq for r in pending))
+                self._mark_handed_all(r.seq for r in pending)
             return pending
 
     # -- consumer side ------------------------------------------------------
@@ -366,6 +392,10 @@ class MicroBatcher:
                 continue
             return r
 
+    #: sentinel: a gathering round ended with no live request — fail its
+    #: expired futures now and start another round
+    _RETRY = object()
+
     def get_batch(self, timeout: Optional[float] = None) -> Optional[MicroBatch]:
         """Block for the next batch; None on timeout or close.
 
@@ -374,91 +404,117 @@ class MicroBatcher:
         elapsed since the batch started forming (**timeout flush**).  With
         a pace gate the batch keeps filling until the gate opens, and
         flushes are serialized at least ``pace_ms`` apart.
+
+        Expired requests are failed (outside the lock) at the end of
+        *every* gathering round, never held until this call returns — a
+        consumer blocking with ``timeout=None`` on an idle queue cannot
+        leave ``DeadlineExceeded`` futures unresolved past their round.
         """
-        expired: List[Request] = []
-        try:
+        wait_deadline = None if timeout is None else self._clock() + timeout
+        while True:
+            expired: List[Request] = []
             with self._cond:
-                wait_deadline = (None if timeout is None
-                                 else self._clock() + timeout)
-                while True:  # until a batch with >= 1 live request ships
-                    # -- phase 1: first live request (or timeout / close) ---
-                    while True:
-                        if self._closed:
-                            return None
-                        first = self._pop_locked(expired)
-                        if first is not None:
-                            break
-                        remaining = None
-                        if wait_deadline is not None:
-                            remaining = wait_deadline - self._clock()
-                            if remaining <= 0:
-                                return None
-                        self._cond.wait(timeout=remaining)
-                    # -- phase 2: gather until full / max_delay / pace ------
-                    reqs = [first]
-                    form_deadline = self._clock() + self.max_delay_s
-                    gather_deadline = max(form_deadline, self._next_flush)
-                    while not self._closed:
-                        now = self._clock()
-                        full = len(reqs) >= self.max_batch
-                        if now >= gather_deadline and not full:
-                            break
-                        if full and now >= self._next_flush:
-                            break
-                        if not full:
-                            nxt = self._pop_locked(expired)
-                            if nxt is not None:
-                                reqs.append(nxt)
-                                continue
-                        # full-but-paced waits for the gate; partial waits
-                        # for more requests (a submit notifies) or deadline
-                        until = self._next_flush if full else gather_deadline
-                        self._cond.wait(timeout=max(0.0, until - now))
-                    # -- phase 3: pace gate — serialize flushes -------------
-                    if self.pace_s > 0 and not self._closed:
-                        while True:
-                            now = self._clock()
-                            if now >= self._next_flush or self._closed:
-                                break
-                            self._cond.wait(timeout=self._next_flush - now)
-                    # flush-time recheck: forming/pacing can outlast a
-                    # deadline, and a gathered request may have expired or
-                    # been cancelled since it was popped — it must not ride
-                    # into the jitted step in a batch slot
-                    self._mark_handed(max(r.seq for r in reqs))
-                    now = self._clock()
-                    live = []
-                    for r in reqs:
-                        if r.future.cancelled():
-                            self.n_cancelled += 1
-                        elif r.deadline is not None and now > r.deadline:
-                            self.n_expired += 1
-                            expired.append(r)
-                        else:
-                            live.append(r)
-                    if live:
-                        reqs = live
-                        if self.pace_s > 0:
-                            # the pace slot is consumed only by a real
-                            # flush — all-expired rounds launch no compute
-                            self._next_flush = self._clock() + self.pace_s
-                        break
-                depth = self._depth_locked()
-        finally:
-            err = DeadlineExceeded("request deadline expired while queued")
-            for r in expired:
-                _fail_quietly(r.future, err)
-        bucket = bucket_for(len(reqs), self.buckets)
-        frames = np.zeros((bucket,) + self.frame_shape, dtype=np.float32)
-        for i, r in enumerate(reqs):
-            frames[i] = r.iq
-        return MicroBatch(requests=reqs, bucket=bucket, frames=frames,
-                          queue_depth=depth)
+                out = self._gather_round_locked(wait_deadline, expired)
+            if expired:
+                err = DeadlineExceeded(
+                    "request deadline expired while queued")
+                for r in expired:
+                    _fail_quietly(r.future, err)
+            if out is self._RETRY:
+                continue
+            if out is None:
+                return None
+            reqs, depth = out
+            bucket = bucket_for(len(reqs), self.buckets)
+            frames = np.zeros((bucket,) + self.frame_shape,
+                              dtype=np.float32)
+            for i, r in enumerate(reqs):
+                frames[i] = r.iq
+            return MicroBatch(requests=reqs, bucket=bucket, frames=frames,
+                              queue_depth=depth)
+
+    def _gather_round_locked(self, wait_deadline: Optional[float],
+                             expired: List[Request]):
+        """One gathering round under ``_cond``: a ``(reqs, depth)`` batch,
+        None (timeout / close), or ``_RETRY`` (round produced only
+        expired/cancelled requests — the caller fails ``expired`` outside
+        the lock and calls again)."""
+        # -- phase 1: first live request (or timeout / close) ---------------
+        while True:
+            if self._closed:
+                return None
+            first = self._pop_locked(expired)
+            if first is not None:
+                break
+            if expired:
+                # nothing live to batch yet but this round already popped
+                # expired requests: hand them back for prompt failure
+                # instead of holding them while blocked on the condition
+                return self._RETRY
+            remaining = None
+            if wait_deadline is not None:
+                remaining = wait_deadline - self._clock()
+                if remaining <= 0:
+                    return None
+            self._cond.wait(timeout=remaining)
+        # -- phase 2: gather until full / max_delay / pace -------------------
+        reqs = [first]
+        form_deadline = self._clock() + self.max_delay_s
+        gather_deadline = max(form_deadline, self._next_flush)
+        while not self._closed:
+            now = self._clock()
+            full = len(reqs) >= self.max_batch
+            if now >= gather_deadline and not full:
+                break
+            if full and now >= self._next_flush:
+                break
+            if not full:
+                nxt = self._pop_locked(expired)
+                if nxt is not None:
+                    reqs.append(nxt)
+                    continue
+            # full-but-paced waits for the gate; partial waits for more
+            # requests (a submit notifies) or the forming deadline
+            until = self._next_flush if full else gather_deadline
+            self._cond.wait(timeout=max(0.0, until - now))
+        # -- phase 3: pace gate — serialize flushes ---------------------------
+        if self.pace_s > 0 and not self._closed:
+            while True:
+                now = self._clock()
+                if now >= self._next_flush or self._closed:
+                    break
+                self._cond.wait(timeout=self._next_flush - now)
+        # flush-time recheck: forming/pacing can outlast a deadline, and a
+        # gathered request may have expired or been cancelled since it was
+        # popped — it must not ride into the jitted step in a batch slot
+        self._mark_handed_all(r.seq for r in reqs)
+        now = self._clock()
+        live = []
+        for r in reqs:
+            if r.future.cancelled():
+                self.n_cancelled += 1
+            elif r.deadline is not None and now > r.deadline:
+                self.n_expired += 1
+                expired.append(r)
+            else:
+                live.append(r)
+        if not live:
+            return self._RETRY
+        if self.pace_s > 0:
+            # the pace slot is consumed only by a real flush —
+            # all-expired rounds launch no compute
+            self._next_flush = self._clock() + self.pace_s
+        return live, self._depth_locked()
 
     def _mark_handed(self, seq: int) -> None:
+        self._mark_handed_all((seq,))
+
+    def _mark_handed_all(self, seqs: Iterable[int]) -> None:
         with self._handed:
-            if seq > self._handed_seq:
-                self._handed_seq = seq
+            self._handed_out_of_order.update(seqs)
+            heap = self._unhanded
+            while heap and heap[0] in self._handed_out_of_order:
+                self._handed_out_of_order.discard(heapq.heappop(heap))
             self._handed.notify_all()
 
 

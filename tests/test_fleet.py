@@ -23,7 +23,13 @@ from repro.fleet import (
     engine_factory,
     merge_stats,
 )
-from repro.serve import AsyncAMCServeEngine, DeadlineExceeded, MicroBatcher, QueueFull, ServeStats
+from repro.serve import (
+    AsyncAMCServeEngine,
+    DeadlineExceeded,
+    MicroBatcher,
+    QueueFull,
+    ServeStats,
+)
 from repro.train.pruning import make_mask_pytree
 
 CFG = SNNConfig(
@@ -235,6 +241,72 @@ def test_rejects_unknown_priority(weights):
     try:
         with pytest.raises(ValueError):
             fleet.submit(_iq(1)[0], priority="best-effort")
+    finally:
+        fleet.close()
+
+
+def test_fenced_replica_takes_no_new_traffic(weights):
+    """The scale_down retirement fence: a replica whose fence is up must
+    be skipped by submit even while it still sits in a (stale) routing
+    snapshot — the window in which a request could otherwise land behind
+    the drain barrier and be dropped by the subsequent engine close."""
+    fleet = FleetRouter(_factory(weights), replicas=2)
+    try:
+        fenced = fleet._snapshot()[1]
+        with fenced.gate:       # exactly what scale_down does before draining
+            fenced.fenced = True
+        futures = [fleet.submit(_iq(4, seed=13)[i]) for i in range(4)]
+        # all traffic routed around the fence (JSQ would otherwise have
+        # spread it across both replicas)
+        assert fenced.engine.batcher.qsize() == 0
+        for f in futures:
+            assert f.result(timeout=30.0) is not None
+        assert fenced.engine.stats.requests == 0
+        assert fleet.n_shed == 0
+    finally:
+        fleet.close()
+
+
+def test_engine_fault_propagates_instead_of_shedding(weights):
+    """Only EngineClosed/QueueFull reroute to the next replica; a genuine
+    engine fault must propagate, not be miscounted as a queue shed."""
+    fleet = FleetRouter(_factory(weights), replicas=1)
+    try:
+        rep = fleet._snapshot()[0]
+        orig = rep.engine.submit
+
+        def broken(*a, **kw):
+            raise RuntimeError("worker fault")
+
+        rep.engine.submit = broken
+        with pytest.raises(RuntimeError, match="worker fault"):
+            fleet.submit(_iq(1)[0])
+        assert fleet.n_shed == 0
+        rep.engine.submit = orig
+        assert fleet.submit(_iq(1)[0]).result(timeout=30.0) is not None
+    finally:
+        fleet.close()
+
+
+def test_scale_down_drains_reordered_priority_backlog(weights):
+    """scale_down on a replica whose queue holds bulk requests *behind*
+    already-served realtime ones: the drain barrier must wait for the
+    low-seq bulk backlog (a max-seq watermark would release early and
+    the close would fail the still-queued futures)."""
+    fleet = FleetRouter(_factory(weights, pace_ms=40.0), replicas=2)
+    try:
+        rep = fleet._snapshot()[1]
+        frames = _iq(10, seed=17)
+        # enqueue directly into the doomed replica: bulk first (low seqs),
+        # then realtime (high seqs) — WRR hands the realtime ones first
+        futures = [rep.engine.submit(frames[i], priority="bulk")
+                   for i in range(5)]
+        futures += [rep.engine.submit(frames[5 + i], priority="realtime")
+                    for i in range(5)]
+        assert fleet.scale_down(drain_timeout=60.0) == rep.name
+        # zero dropped requests: every future resolved with a prediction
+        for f in futures:
+            assert f.result(timeout=30.0) is not None
     finally:
         fleet.close()
 

@@ -18,6 +18,8 @@ from repro.distributed.sharding import serve_mesh
 from repro.serve import (
     AMCServeEngine,
     AsyncAMCServeEngine,
+    DeadlineExceeded,
+    EngineClosed,
     MicroBatcher,
     QueueFull,
     ServeStats,
@@ -98,8 +100,48 @@ def test_batcher_rejects_bad_shapes_and_close_wakes_consumers():
         mb.submit(np.zeros((3, 7), np.float32))
     mb.close()
     assert mb.get_batch(timeout=1.0) is None  # sentinel wakes the consumer
-    with pytest.raises(RuntimeError, match="closed"):
+    # the dedicated type (an EngineClosed IS-A RuntimeError) lets the
+    # fleet router skip a retiring replica without masking real faults
+    with pytest.raises(EngineClosed, match="closed"):
         mb.submit(np.zeros(FRAME_SHAPE, np.float32))
+
+
+def test_drain_barrier_waits_for_priority_reordered_backlog():
+    """Weighted dequeue hands realtime ahead of bulk; the barrier must
+    still hold until the *lower-seq* bulk request is handed — a max-seq
+    watermark would release it early and let hot_swap/scale_down close
+    an engine over a still-queued request."""
+    mb = MicroBatcher(FRAME_SHAPE, max_batch=1, max_delay_ms=1)
+    frames = _iq(2)
+    bulk = mb.submit(frames[0], priority="bulk")          # seq 0
+    mb.submit(frames[1], priority="realtime")             # seq 1
+    batch = mb.get_batch(timeout=1.0)                     # WRR: realtime first
+    assert [r.priority for r in batch.requests] == ["realtime"]
+    # seq 1 handed, seq 0 still queued: the barrier must NOT release
+    assert not mb.drain_barrier(timeout=0.05)
+    batch = mb.get_batch(timeout=1.0)
+    assert [r.priority for r in batch.requests] == ["bulk"]
+    assert mb.drain_barrier(timeout=1.0)
+    bulk.cancel()
+    mb.close()
+
+
+def test_expired_requests_fail_even_while_consumer_keeps_blocking():
+    """A round that pops only expired requests must fail their futures
+    when the round ends — not hold them until get_batch returns (which,
+    with no further traffic and timeout=None, is never)."""
+    mb = MicroBatcher(FRAME_SHAPE, max_batch=4, max_delay_ms=1)
+    fut = mb.submit(_iq(1)[0], deadline=mb.now() - 1.0)   # already expired
+    consumer = threading.Thread(target=mb.get_batch,
+                                kwargs={"timeout": None}, daemon=True)
+    consumer.start()
+    with pytest.raises(DeadlineExceeded):
+        fut.result(timeout=5.0)       # resolves while get_batch still blocks
+    assert consumer.is_alive()        # no live request ever arrived
+    assert mb.n_expired == 1
+    mb.close()
+    consumer.join(timeout=5.0)
+    assert not consumer.is_alive()
 
 
 # ---------------------------------------------------------------------------
