@@ -3,16 +3,24 @@ plus cold/memory/disk plan-compile cost, on the paper config.
 
 Two questions, answered with wall-clock numbers in ``BENCH_fusion.json``:
 
-* **Execution** — does threading all layers through one ``lax.scan``
-  (``ExecutionPlan.batch``, the paper's inter-layer pipeline analogue)
-  beat the layer-by-layer path (``plan.bound.batch``) that materializes
-  every intermediate (T, C, W) sequence?  Measured per backend on the
-  paper config at 50% density; the two paths are also asserted allclose.
+* **Execution** — does the fused streaming path (``ExecutionPlan.batch``:
+  one ``lax.scan`` over timesteps, or — for the ``pallas_fused``
+  assignment — one multi-layer Pallas kernel launch with all LIF state in
+  VMEM) beat the layer-by-layer path (``plan.bound.batch``) that
+  materializes every intermediate (T, C, W) sequence?  Measured across
+  **all registered backends** on the paper config at 50% density; the two
+  paths are also asserted allclose, and each row carries its achieved
+  fraction of the analytic streaming-roofline target
+  (``repro.launch.roofline.streaming_roofline``).
 * **Compilation** — what does ``compile_plan`` cost cold (artifacts
   derived from weights), warm in memory (same process rebind: trainer
   eval loops), and warm from disk (process restart: serve redeploys)?
   The artifact build counter is recorded alongside so "cached" provably
   means "nothing rebuilt".
+
+``benchmarks/run.py --check-regression`` diffs a fresh run of this module
+against the committed ``BENCH_fusion.json`` and fails on >20% drops in
+``fused_speedup`` or layered fps — the perf-gate CI job.
 
 Run:  PYTHONPATH=src python benchmarks/fusion_bench.py [--smoke] [--out p]
 """
@@ -33,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.api import compile_plan, compile_snn, init_snn
 from repro.configs.saocds_amc import CONFIG as CFG
+from repro.launch.roofline import streaming_roofline
 from repro.models.graph import artifact_build_count
 from repro.plan import PlanCache
 from repro.train.pruning import make_mask_pytree
@@ -40,7 +49,14 @@ from repro.train.pruning import make_mask_pytree
 NAME = "fusion_bench"
 
 DENSITY = 0.5
-EXEC_BACKENDS = ("dense", "goap")  # pallas interpret mode is CPU-meaningless
+# Every registered execution backend.  Interpret-mode Pallas and the
+# Algorithm-2 schedule interpreter are orders of magnitude slower per
+# sample on CPU, so each backend gets a batch cap that keeps the sweep
+# under a CPU-minute while still timing steady state.
+EXEC_BACKENDS = ("dense", "goap", "pallas", "stream", "fixed",
+                 "pallas_fused")
+_BATCH_CAP = {"pallas": 2, "stream": 4, "pallas_fused": 8}
+_INTERPRET_BACKENDS = ("pallas", "pallas_fused")
 
 
 def _spike_frames(batch: int) -> jnp.ndarray:
@@ -57,11 +73,31 @@ def _time(fn, *args, reps: int = 3) -> float:
     return (time.perf_counter() - t0) / reps
 
 
+def _backend_plan_and_frames(program, params, masks, backend: str,
+                             batch: int):
+    """(plan, frames) for one backend — the fixed backend binds with its
+    LSQ quant_fn and consumes integer-encoded frames."""
+    if backend == "fixed":
+        from repro.data.radioml import generate_batch
+        from repro.fixed import FixedQuantFn, fixed_encode_batch
+        from repro.train.lsq import init_lsq_scales
+
+        scales = init_lsq_scales(params, 16)
+        plan = compile_plan(program, params, masks=masks,
+                            quant_fn=FixedQuantFn(scales, bits=16),
+                            assignment="fixed")
+        iq, _, _ = generate_batch(0, batch, snr_db=10.0,
+                                  frame_len=CFG.input_width)
+        return plan, fixed_encode_batch(jnp.asarray(iq, jnp.float32),
+                                        CFG.timesteps)
+    plan = compile_plan(program, params, masks=masks, assignment=backend)
+    return plan, _spike_frames(batch)
+
+
 def run(batch: int = 32, reps: int = 3) -> dict:
     program = compile_snn(CFG)
     params = init_snn(jax.random.PRNGKey(0), CFG)
     masks = make_mask_pytree(params, DENSITY)
-    frames = _spike_frames(batch)
 
     # -- plan compile: cold vs memory-cached vs disk-cached -----------------
     tmp = tempfile.mkdtemp(prefix="fusion-bench-plans-")
@@ -97,25 +133,34 @@ def run(batch: int = 32, reps: int = 3) -> dict:
             "cold_over_disk": cold_s / max(disk_s, 1e-9),
         }
 
-        # -- execution: fused single-scan vs layer-by-layer -----------------
+        # -- execution: fused streaming path vs layer-by-layer ---------------
+        on_tpu = jax.default_backend() == "tpu"
         rows = []
         for backend in EXEC_BACKENDS:
-            plan = compile_plan(program, params, masks=masks,
-                                assignment=backend, cache=cache)
+            b = batch if on_tpu else min(batch, _BATCH_CAP.get(backend,
+                                                               batch))
+            plan, frames = _backend_plan_and_frames(program, params, masks,
+                                                    backend, b)
             layered = jax.jit(plan.bound.batch)
-            fused = jax.jit(plan.batch)
+            fused = jax.jit(plan.preferred_batch())
             out_l = np.asarray(layered(frames))
             out_f = np.asarray(fused(frames))
             err = float(np.abs(out_l - out_f).max())
             t_layered = _time(layered, frames, reps=reps)
             t_fused = _time(fused, frames, reps=reps)
+            roof = streaming_roofline(CFG, density=DENSITY, batch=b)
             rows.append({
                 "backend": backend,
+                "batch": b,
+                "interpret": (backend in _INTERPRET_BACKENDS
+                              and not on_tpu),
                 "layered_ms": t_layered * 1e3,
                 "fused_ms": t_fused * 1e3,
-                "layered_fps": batch / t_layered,
-                "fused_fps": batch / t_fused,
+                "layered_fps": b / t_layered,
+                "fused_fps": b / t_fused,
                 "fused_speedup": t_layered / max(t_fused, 1e-9),
+                "roofline_target_fps": roof["target_fps"],
+                "roofline_fraction": (b / t_fused) / roof["target_fps"],
                 "max_abs_err": err,
             })
             assert err <= 1e-5, f"fused != layered for {backend}: {err}"
@@ -145,11 +190,14 @@ def format_table(res: dict) -> str:
         f"{c['disk_hit_artifact_builds']} artifacts)",
     ]
     for r in res["execution"]:
+        tag = " [interpret]" if r.get("interpret") else ""
         lines.append(
-            f"  {r['backend']:6s} layered {r['layered_ms']:8.1f} ms "
+            f"  {r['backend']:12s} b={r['batch']:<3d} "
+            f"layered {r['layered_ms']:8.1f} ms "
             f"({r['layered_fps']:7.1f} fps)   fused {r['fused_ms']:8.1f} ms "
             f"({r['fused_fps']:7.1f} fps)   speedup {r['fused_speedup']:.2f}x"
-            f"   err {r['max_abs_err']:.1e}")
+            f"   roofline {r['roofline_fraction']:.2e}"
+            f"   err {r['max_abs_err']:.1e}{tag}")
     return "\n".join(lines)
 
 

@@ -86,6 +86,34 @@ def fixed_md() -> str:
     return "\n".join([head, sep] + rows) + tail
 
 
+def streaming_md() -> str:
+    """Digest of the streaming-SNN kernel roofline + measured fractions."""
+    roof = _bench_json("roofline")
+    if roof is None or "snn" not in roof:
+        return ("_no streaming roofline artifact (run "
+                "benchmarks/roofline.py)_")
+    pts = roof["snn"]["points"]
+    head = ("| density | batch | intensity (F/B) | bound | target fps |")
+    sep = "|---" * 5 + "|"
+    rows = [f"| {p['density']:g} | {p['batch']} | "
+            f"{float(p['intensity_flops_per_byte']):.2f} | {p['bound']} | "
+            f"{float(p['target_fps']):.3e} |" for p in pts]
+    tail = ""
+    fusion = _bench_json("fusion")
+    if fusion is not None:
+        meas = [r for r in fusion["execution"]
+                if "roofline_fraction" in r]
+        if meas:
+            best = max(meas, key=lambda r: float(r["roofline_fraction"]))
+            tail = (f"\nBest measured: `{best['backend']}` at "
+                    f"{float(best['fused_fps']):.0f} fps = "
+                    f"{float(best['roofline_fraction']):.2e} of the "
+                    f"modeled {roof['snn']['points'][0]['hw']} target "
+                    f"(`{fusion['jax_backend']}` host"
+                    f"{', interpret mode' if best.get('interpret') else ''}).")
+    return "\n".join([head, sep] + rows) + tail
+
+
 def _cells(mesh: str):
     out = []
     for f in sorted((DRY / mesh).glob("*.json")):
@@ -152,6 +180,7 @@ def main(argv=None) -> int:
     print("\n## Deployment\n\n" + deploy_md())
     print("\n## Channel robustness\n\n" + robustness_md())
     print("\n## Fixed-point tier\n\n" + fixed_md())
+    print("\n## Streaming-kernel roofline\n\n" + streaming_md())
     if args.write:
         p = pathlib.Path("EXPERIMENTS.md")
         txt = p.read_text()

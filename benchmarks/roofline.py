@@ -1,24 +1,54 @@
-"""Roofline report: aggregates the dry-run sweep into the 40-cell table.
+"""Roofline report: dry-run sweep table + streaming-SNN kernel targets.
 
-Reads ``experiments/dryrun/<mesh>/<arch>__<shape>.json`` (produced by
-``python -m repro.launch.dryrun --all``) and renders EXPERIMENTS.md
-§Roofline: the three terms, the bottleneck, MODEL_FLOPS/HLO ratio, and
-the modeled-bound MFU per cell.
+Two sections:
+
+* **Dry-run cells** — reads ``experiments/dryrun/<mesh>/<arch>__<shape>
+  .json`` (produced by ``python -m repro.launch.dryrun --all``) and
+  renders EXPERIMENTS.md §Roofline: the three terms, the bottleneck,
+  MODEL_FLOPS/HLO ratio, and the modeled-bound MFU per cell.
+* **Streaming SNN** — the analytic roofline of the fused multi-layer
+  streaming kernel on the paper config
+  (:func:`repro.launch.roofline.streaming_roofline`): operational
+  intensity, compute/memory bound, and the target fps the modeled
+  hardware allows, across a density x batch grid.  ``fusion_bench``
+  divides its measured fps by these targets to report achieved roofline
+  fractions.
+
+Run standalone (``python benchmarks/roofline.py [--out p]``) it writes
+``BENCH_roofline.json``; under ``benchmarks/run.py`` the same record
+lands in ``experiments/bench/roofline.json`` and is digested by
+``gen_report.py``.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
+import sys
 
 NAME = "roofline"
 DRYRUN_DIR = pathlib.Path("experiments/dryrun")
 
+_SNN_DENSITIES = (1.0, 0.5, 0.25, 0.1)
+_SNN_BATCHES = (1, 32)
+
+
+def _snn_section() -> dict:
+    """Analytic streaming-kernel roofline grid for the paper config."""
+    from repro.configs.saocds_amc import CONFIG as CFG
+    from repro.launch.roofline import streaming_roofline
+
+    points = [streaming_roofline(CFG, density=d, batch=b)
+              for d in _SNN_DENSITIES for b in _SNN_BATCHES]
+    return {"config": "saocds-amc (paper)", "points": points}
+
 
 def run(mesh: str = "single") -> dict:
+    snn = _snn_section()
     rows = []
     d = DRYRUN_DIR / mesh
     if not d.exists():
-        return {"rows": [], "missing": True, "mesh": mesh}
+        return {"rows": [], "missing": True, "mesh": mesh, "snn": snn}
     for f in sorted(d.glob("*.json")):
         rec = json.loads(f.read_text())
         if rec.get("skipped"):
@@ -42,12 +72,30 @@ def run(mesh: str = "single") -> dict:
             "live_gb": m.get("peak_live_bytes", 0) / 1e9,
             "fits": m.get("fits_16g_hbm"),
         })
-    return {"rows": rows, "mesh": mesh, "missing": False}
+    return {"rows": rows, "mesh": mesh, "missing": False, "snn": snn}
+
+
+def _snn_table(snn: dict) -> str:
+    lines = [
+        f"Streaming-SNN kernel roofline ({snn['config']}, "
+        f"{snn['points'][0]['hw']})",
+        f"  {'density':>8s}{'batch':>6s}{'flops/frame':>13s}"
+        f"{'bytes/frame':>13s}{'intensity':>11s} {'bound':8s}"
+        f"{'target fps':>12s}",
+    ]
+    for p in snn["points"]:
+        lines.append(
+            f"  {p['density']:8.2f}{p['batch']:6d}"
+            f"{p['flops_per_frame']:13.3e}{p['bytes_per_frame']:13.3e}"
+            f"{p['intensity_flops_per_byte']:11.2f} {p['bound']:8s}"
+            f"{p['target_fps']:12.3e}")
+    return "\n".join(lines)
 
 
 def format_table(res: dict) -> str:
     if res.get("missing"):
-        return (f"roofline: no dry-run results under {DRYRUN_DIR}/"
+        return (_snn_table(res["snn"]) + "\n"
+                f"roofline: no dry-run results under {DRYRUN_DIR}/"
                 f"{res['mesh']} — run `python -m repro.launch.dryrun --all`")
     lines = [
         f"Roofline terms per cell ({res['mesh']} mesh; seconds/step)",
@@ -68,10 +116,22 @@ def format_table(res: dict) -> str:
             f"{r['bottleneck']:10s}{r['useful_ratio']:7.2f}"
             f"{r['mfu_bound']:10.3f}{r['live_gb']:8.1f}"
             f"{'' if r['fits'] else '  OVER-HBM'}")
+    lines.append("")
+    lines.append(_snn_table(res["snn"]))
     return "\n".join(lines)
 
 
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_roofline.json")
+    args = ap.parse_args(argv)
+    res = run("single")
+    print(format_table(res))
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(res, indent=1, default=str))
+    print(f"wrote {out}")
+    return 0
+
+
 if __name__ == "__main__":
-    print(format_table(run("single")))
-    print()
-    print(format_table(run("multi")))
+    sys.exit(main())

@@ -4,6 +4,13 @@ Runs one module per paper table/figure plus the kernel microbench and the
 roofline report, prints each, and writes JSON records to
 ``experiments/bench/``.  ``--quick`` skips the training-based accuracy
 sweep (several CPU-minutes); ``--only <name>`` runs one module.
+
+``--check-regression`` is the perf gate: it reruns ``fusion_bench`` at
+the committed batch size and exit-fails if any backend's
+``fused_speedup`` or layered fps dropped more than ``--tolerance``
+(default 20%) below the committed ``BENCH_fusion.json``.  CI runs it on
+every push so a change that silently slows the fused streaming path (or
+de-fuses it) turns the build red.
 """
 from __future__ import annotations
 
@@ -47,11 +54,99 @@ def _modules(quick: bool):
     return mods
 
 
+def _gate_failures(base: dict, best: dict, tolerance: float):
+    """Compare best-observed fresh metrics against the committed floors.
+
+    ``fused_speedup`` is a within-run ratio, compared directly.
+    ``layered_fps`` is absolute throughput, so its floor is rescaled by
+    the dense backend's fresh/committed layered-fps ratio — dense is the
+    machine-speed proxy, making the gate meaningful on hosts (CI runners)
+    slower or faster than the one that committed the baseline.
+    """
+    base_rows = {r["backend"]: r for r in base["execution"]}
+    dense_base = base_rows.get("dense", {}).get("layered_fps")
+    dense_fresh = best.get("dense", {}).get("layered_fps")
+    calib = (float(dense_fresh) / float(dense_base)
+             if dense_base and dense_fresh else 1.0)
+    failures, lines = [], [f"  machine-speed calibration (dense layered): "
+                           f"x{calib:.2f}"]
+    for br in base["execution"]:
+        name = br["backend"]
+        fr = best.get(name)
+        if fr is None:
+            failures.append(f"{name}: backend missing from fresh run")
+            continue
+        for metric in ("fused_speedup", "layered_fps"):
+            scale = calib if metric == "layered_fps" else 1.0
+            floor = float(br[metric]) * scale * (1.0 - tolerance)
+            got = float(fr[metric])
+            verdict = "ok" if got >= floor else "REGRESSED"
+            lines.append(f"  {name:12s} {metric:13s} committed "
+                         f"{float(br[metric]):10.2f}  best fresh "
+                         f"{got:10.2f}  floor {floor:10.2f}  {verdict}")
+            if got < floor:
+                failures.append(
+                    f"{name}.{metric}: {got:.2f} < floor {floor:.2f} "
+                    f"(committed {float(br[metric]):.2f}, "
+                    f"tolerance {tolerance:.0%})")
+    return failures, lines
+
+
+def check_regression(baseline: pathlib.Path, tolerance: float,
+                     reps: int = 3, attempts: int = 3) -> int:
+    """Rerun fusion_bench at the committed batch; fail on >tolerance drops.
+
+    Gated metrics, per backend row present in the committed artifact:
+    ``fused_speedup`` (within-run ratio — catches de-fusing) and
+    ``layered_fps`` (throughput, machine-calibrated — catches backend
+    slowdowns).  Wall-clock benchmarks on shared hosts are noisy, so the
+    gate keeps the best value per metric over up to ``attempts`` fresh
+    runs and only fails if a floor is still unmet after the last.
+    """
+    from . import fusion_bench
+
+    base = json.loads(baseline.read_text())
+    print(f"perf gate: baseline {baseline} "
+          f"(batch {base['batch']}, {base['jax_backend']})")
+    best: dict = {}
+    failures, lines = ["no fresh run"], []
+    for attempt in range(attempts):
+        fresh = fusion_bench.run(batch=int(base["batch"]), reps=reps)
+        print(f"-- attempt {attempt + 1}/{attempts}")
+        print(fusion_bench.format_table(fresh))
+        for r in fresh["execution"]:
+            slot = best.setdefault(r["backend"], dict(r))
+            for metric in ("fused_speedup", "layered_fps"):
+                slot[metric] = max(float(slot[metric]), float(r[metric]))
+        failures, lines = _gate_failures(base, best, tolerance)
+        if not failures:
+            break
+    print("\n".join(lines))
+    if failures:
+        print("perf gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"perf gate OK ({len(base['execution'])} backends, "
+          f"tolerance {tolerance:.0%})")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--check-regression", action="store_true",
+                    help="perf gate: rerun fusion_bench and compare "
+                         "against the committed baseline")
+    ap.add_argument("--baseline", default="BENCH_fusion.json",
+                    help="committed artifact the perf gate diffs against")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional drop per gated metric")
     args = ap.parse_args(argv)
+
+    if args.check_regression:
+        return check_regression(pathlib.Path(args.baseline), args.tolerance)
 
     OUT.mkdir(parents=True, exist_ok=True)
     failures = 0

@@ -5,20 +5,29 @@ I: (IC, WI) binary; the kernel is (KW, IC, OC); valid convolution gives
 O: (OC, OI) with OI = WI - KW + 1, stride 1 (the paper's RF signals are 1-D,
 H = 1 everywhere).
 
-Three implementations, all equal to the dense oracle:
+Four implementations, all equal to the dense oracle:
 
 * ``conv1d_dense_oracle``  — im2col matmul, the mathematical ground truth
   and the sliding-window (SW) baseline compute.
+* ``goap_conv_packed``     — the serving hot path: COO pre-sorted by output
+  channel and packed into a padded (OC, S) layout at plan-compile time
+  (:func:`goap_pack`), so the whole timestep lowers to one gather + one
+  fused contraction (no ``segment_sum`` scatter dispatch).
 * ``goap_conv_nnz``        — vectorized weight-priority iteration: every
   non-zero weight w@(oc, ic, ci) contributes ``w * I[ic, ci:ci+OI]`` to
   output row oc (its *enable map*); gathered + segment-summed, jittable.
-* ``goap_conv_reference``  — literal Algorithm-1 numpy loop (tests only).
+* ``goap_conv_reference``  — Algorithm-1 emulation in numpy (tests only);
+  vectorized behind a cached index table, bit-identical to the literal
+  double loop (``goap_conv_reference_loop``).
 
 ``build_shift_buffer`` produces the binary shifted-input matrix
 X'(IC*KW, OI) with X'[ic*KW + ci, oi] = I[ic, oi + ci]; dense conv is then
 ``W'(OC, IC*KW) @ X'`` which is the layout the TPU block-sparse kernel uses.
 """
 from __future__ import annotations
+
+import dataclasses
+import functools
 
 import numpy as np
 
@@ -30,8 +39,12 @@ from .sparse_format import CooKernel
 __all__ = [
     "conv1d_dense_oracle",
     "build_shift_buffer",
+    "PackedCoo",
+    "goap_pack",
+    "goap_conv_packed",
     "goap_conv_nnz",
     "goap_conv_reference",
+    "goap_conv_reference_loop",
 ]
 
 
@@ -53,6 +66,68 @@ def conv1d_dense_oracle(ifm: jax.Array, kernel: jax.Array) -> jax.Array:
     x = build_shift_buffer(ifm, kw)                     # (IC*KW, OI)
     w = jnp.transpose(kernel, (2, 1, 0)).reshape(oc, ic * kw)  # W'
     return w @ x.astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Packed per-output-channel layout (the serving hot path).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PackedCoo:
+    """COO kernel re-packed per output channel for one-op execution.
+
+    Row ``oc`` of ``w_pad``/``row_pad`` holds that channel's non-zero
+    weights in the COO streaming order, padded to S = max per-channel nnz
+    with **zero weights pointing at shift-buffer row 0** — a no-op
+    contribution, the same static-schedule trick the accelerator (extra/
+    empty iterations) and the block-sparse TPU layout use.  The whole
+    timestep is then ``einsum('os,osk->ok', w_pad, X'[row_pad])``: one
+    gather + one fused contraction, no data-dependent scatter.
+    """
+
+    w_pad: np.ndarray    # (OC, S) float32 weights, zero padded
+    row_pad: np.ndarray  # (OC, S) int32 rows into X' (= ic*KW + ci)
+    kw: int
+    ic: int
+    oc: int
+
+    @property
+    def s(self) -> int:
+        return int(self.w_pad.shape[1])
+
+
+def goap_pack(coo: CooKernel) -> PackedCoo:
+    """Pack an (oc-major sorted) COO kernel into the padded (OC, S) layout."""
+    oc_idx = (coo.row_idx // coo.ic).astype(np.int64)
+    ic_idx = (coo.row_idx % coo.ic).astype(np.int64)
+    counts = np.bincount(oc_idx, minlength=coo.oc) if coo.nnz else \
+        np.zeros(coo.oc, dtype=np.int64)
+    s = max(1, int(counts.max()) if counts.size else 1)
+    w_pad = np.zeros((coo.oc, s), dtype=np.float32)
+    row_pad = np.zeros((coo.oc, s), dtype=np.int32)
+    if coo.nnz:
+        if np.any(np.diff(oc_idx) < 0):
+            raise ValueError("COO kernel is not sorted output-channel-major")
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        slot = np.arange(coo.nnz) - starts[oc_idx]   # position within its oc
+        w_pad[oc_idx, slot] = coo.data.astype(np.float32)
+        row_pad[oc_idx, slot] = ic_idx * coo.kw + coo.col_idx
+    return PackedCoo(w_pad=w_pad, row_pad=row_pad,
+                     kw=coo.kw, ic=coo.ic, oc=coo.oc)
+
+
+def goap_conv_packed(ifm: jax.Array, pack: PackedCoo) -> jax.Array:
+    """GOAP conv through the packed layout: one gather, one contraction.
+
+    Equivalent to :func:`goap_conv_nnz` (same enable-map sums, padded
+    zero-weight slots contribute exactly +0.0) but lowers to a single
+    fused dot instead of gather -> ``segment_sum`` scatter dispatch —
+    the XLA:CPU scatter path is what made the goap backend ~14x slower
+    than dense.
+    """
+    x = build_shift_buffer(ifm, pack.kw).astype(jnp.float32)  # (IC*KW, OI)
+    ems = x[jnp.asarray(pack.row_pad)]                        # (OC, S, OI)
+    return jnp.einsum("os,osk->ok", jnp.asarray(pack.w_pad), ems)
 
 
 def goap_conv_nnz(ifm: jax.Array, coo: CooKernel) -> jax.Array:
@@ -82,8 +157,57 @@ def goap_conv_nnz(ifm: jax.Array, coo: CooKernel) -> jax.Array:
     return jax.ops.segment_sum(contrib, oc_idx, num_segments=coo.oc)
 
 
+# ---------------------------------------------------------------------------
+# Algorithm-1 reference (tests only).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=256)
+def _reference_index_table(row_bytes: bytes, col_bytes: bytes, nnz: int,
+                           kw: int, ic: int, wi: int):
+    """Cached gather table for the vectorized reference emulator.
+
+    Keyed on the COO index bytes so repeated property-test calls on the
+    same kernel (hypothesis shrinking, parametrized sweeps) skip the
+    table derivation entirely.
+    """
+    row_idx = np.frombuffer(row_bytes, dtype=np.int32)
+    col_idx = np.frombuffer(col_bytes, dtype=np.int32)
+    oi = wi - kw + 1
+    oc_idx = (row_idx // ic).astype(np.int64)
+    ic_idx = (row_idx % ic).astype(np.int64)
+    # flat[n, o] indexes ifm.ravel() at (ic_n, o + ci_n)
+    flat = (ic_idx[:, None] * wi
+            + col_idx[:, None].astype(np.int64)
+            + np.arange(oi, dtype=np.int64)[None, :])
+    return oc_idx, flat
+
+
 def goap_conv_reference(ifm: np.ndarray, coo: CooKernel) -> np.ndarray:
-    """Literal Algorithm-1 loop (numpy; tests/small shapes only)."""
+    """Algorithm-1 emulation, vectorized (numpy; tests/small shapes).
+
+    Bit-identical to :func:`goap_conv_reference_loop`: ``np.add.at``
+    applies contributions sequentially in COO order, so every (oc, o)
+    accumulator sees the exact same float64 addition sequence as the
+    literal loop (gated-off positions add +0.0, an exact identity).
+    """
+    icn, wi = ifm.shape
+    oi = wi - coo.kw + 1
+    out = np.zeros((coo.oc, oi), dtype=np.float64)
+    if coo.nnz == 0:
+        return out
+    oc_idx, flat = _reference_index_table(
+        np.ascontiguousarray(coo.row_idx, dtype=np.int32).tobytes(),
+        np.ascontiguousarray(coo.col_idx, dtype=np.int32).tobytes(),
+        coo.nnz, coo.kw, icn, wi)
+    gate = (np.asarray(ifm).ravel()[flat] != 0)          # (nnz, OI)
+    contrib = coo.data.astype(np.float64)[:, None] * gate
+    np.add.at(out, oc_idx, contrib)
+    return out
+
+
+def goap_conv_reference_loop(ifm: np.ndarray, coo: CooKernel) -> np.ndarray:
+    """Literal Algorithm-1 double loop (the original reference; kept as
+    the bit-equality oracle for the vectorized emulator above)."""
     icn, wi = ifm.shape
     oi = wi - coo.kw + 1
     out = np.zeros((coo.oc, oi), dtype=np.float64)

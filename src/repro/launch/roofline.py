@@ -24,7 +24,8 @@ from repro.models.config import ArchConfig
 from .hlo_analysis import HloAnalysis
 from .mesh import HW
 
-__all__ = ["model_flops", "roofline_terms"]
+__all__ = ["model_flops", "roofline_terms", "snn_stream_cost",
+           "streaming_roofline"]
 
 
 def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
@@ -85,5 +86,79 @@ def roofline_terms(
         "model_flops": mf,
         "useful_ratio": useful_ratio,
         "mfu_bound": mfu_bound,
+        "hw": HW["name"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Streaming-SNN roofline (the fused multi-layer kernel's bytes/FLOP target).
+# ---------------------------------------------------------------------------
+
+def snn_stream_cost(cfg, density: float = 1.0) -> Dict:
+    """Analytic per-frame work of the streaming SNN forward pass.
+
+    ``cfg`` is an :class:`repro.models.snn.SNNConfig`.  FLOPs follow the
+    paper's counting: conv MACs scale with weight density (the GOAP
+    dataflow executes only non-zero weights), LIF updates cost ~4 ops per
+    neuron-timestep (decay, accumulate, threshold, soft reset).  Bytes are
+    the fused kernel's *streaming* HBM plan — each weight fetched once
+    (resident in VMEM thereafter), each binary input frame read once, the
+    logits written once; membrane state never touches HBM.  The
+    layer-by-layer executor instead round-trips every intermediate
+    (T, C, W) spike sequence, reported as ``layered_extra_bytes``.
+    """
+    t_steps = cfg.timesteps
+    width = cfg.input_width
+    flops = 0.0
+    weight_bytes = 0
+    inter_bytes = 0  # intermediate (T, C, W) sequences, layered path only
+    for kw, ic, oc in cfg.conv_specs:
+        flops += 2.0 * kw * ic * oc * width * density * t_steps  # GOAP MACs
+        flops += 4.0 * oc * width * t_steps                       # LIF
+        weight_bytes += kw * ic * oc * 4
+        inter_bytes += 2 * t_steps * oc * width * 4               # w + r
+        width //= cfg.pool
+    for din, dout in cfg.fc_specs:
+        flops += 2.0 * din * dout * t_steps + 4.0 * dout * t_steps
+        weight_bytes += din * dout * 4
+        inter_bytes += 2 * t_steps * dout * 4
+    frame_bytes = t_steps * cfg.conv_specs[0][1] * cfg.input_width * 4
+    return {
+        "flops_per_frame": flops,
+        "weight_bytes": weight_bytes,
+        "frame_bytes": frame_bytes,
+        "logit_bytes": cfg.n_classes * 4,
+        "layered_extra_bytes": inter_bytes,
+        "density": density,
+    }
+
+
+def streaming_roofline(cfg, density: float = 0.5, batch: int = 1,
+                       chips: int = 1) -> Dict:
+    """Roofline target for the fused streaming kernel on the modeled HW.
+
+    Weights amortize over the batch (constant-index blocks stay resident
+    across the whole grid); frames and logits stream per sample.  The
+    returned ``target_fps`` is the frames/s the modeled bound allows —
+    benchmarks divide their measured fps by it to report the achieved
+    roofline fraction.
+    """
+    cost = snn_stream_cost(cfg, density)
+    peak, hbm = HW["peak_flops_bf16"], HW["hbm_bw"]
+    bytes_pf = (cost["frame_bytes"] + cost["logit_bytes"]
+                + cost["weight_bytes"] / max(1, batch))
+    flops_pf = cost["flops_per_frame"]
+    t_compute = flops_pf / (chips * peak)
+    t_memory = bytes_pf / (chips * hbm)
+    t_bound = max(t_compute, t_memory)
+    return {
+        **cost,
+        "bytes_per_frame": bytes_pf,
+        "intensity_flops_per_byte": flops_pf / bytes_pf,
+        "ridge_flops_per_byte": peak / hbm,
+        "bound": "compute" if t_compute >= t_memory else "memory",
+        "target_fps": 1.0 / t_bound,
+        "batch": batch,
+        "chips": chips,
         "hw": HW["name"],
     }

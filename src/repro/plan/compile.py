@@ -202,10 +202,15 @@ class ExecutionPlan:
     """An immutable, fully-precomputed execution of one SNN.
 
     * ``run_streaming(frames)`` — all layers fused into a single scan over
-      timesteps (the paper's inter-layer pipeline);
+      timesteps (the paper's inter-layer pipeline); when every weighted
+      layer is assigned ``pallas_fused`` this collapses further into one
+      multi-layer Pallas kernel launch
+      (:mod:`repro.kernels.stream_fused`);
     * ``run_layered(frames)`` — the layer-by-layer reference path over the
       same cells (used for validation and legacy ``apply`` semantics);
-    * ``batch(frames_b)`` — vmapped fused executor.
+    * ``batch(frames_b)`` — batched fused executor (the multi-layer kernel
+      takes the batch into its own grid; other assignments vmap the
+      single-sample streaming path).
     """
 
     cfg: SNNConfig
@@ -225,9 +230,28 @@ class ExecutionPlan:
     def __call__(self, frames: jax.Array) -> jax.Array:
         return self.run_streaming(frames)[0]
 
+    def fused_stack(self):
+        """Operands for the single-launch multi-layer kernel, or None
+        (None unless every weighted layer is assigned ``pallas_fused``)."""
+        from repro.kernels.stream_fused import fused_stack_of
+
+        return fused_stack_of(self)
+
     def batch(self, frames_b: jax.Array) -> jax.Array:
         """(B, T, IC0, W) -> (B, n_classes) through the fused executor."""
+        stack = self.fused_stack()
+        if stack is not None:
+            from repro.kernels.stream_fused import stream_fused_forward
+
+            return stream_fused_forward(stack, frames_b)[0]
         return jax.vmap(lambda f: self.run_streaming(f)[0])(frames_b)
+
+    def preferred_batch(self):
+        """The fastest whole-batch callable this plan offers: the fused
+        multi-layer kernel when the assignment provides one, else the
+        layer-by-layer bound path (which beats the generic single-scan
+        executor on XLA:CPU — see BENCH_fusion.json)."""
+        return self.batch if self.fused_stack() is not None else self.bound.batch
 
     def cost_priors(self) -> Dict[str, Dict[str, float]]:
         """Per weighted layer: predicted relative cost per backend."""

@@ -50,7 +50,23 @@ def run_streaming(plan, frames: jax.Array):
     counters)`` with the same contract as ``BoundProgram.run``: counters
     carries the per-conv-layer iteration counts when the ``stream``
     backend is assigned (empty otherwise).
+
+    When every weighted layer is assigned ``pallas_fused`` the scan
+    collapses into one multi-layer Pallas kernel launch with all LIF
+    state in VMEM (:mod:`repro.kernels.stream_fused`); its counters are
+    the same Tables I/III quantities, computed in-kernel.
     """
+    from repro.kernels.stream_fused import (
+        fused_counters,
+        fused_stack_of,
+        stream_fused_forward,
+    )
+
+    stack = fused_stack_of(plan)
+    if stack is not None:
+        logits, accs = stream_fused_forward(stack, frames[None])
+        return logits[0], fused_counters(stack, accs[0])
+
     cells = [lp.cell for lp in plan.layers]
     states0 = init_stream_states(cells, timestep_template(frames))
 

@@ -48,7 +48,21 @@ __all__ = [
 # Interpret-mode Pallas is orders of magnitude off the pace and only slows
 # the race down; only let it compete where a real TPU will run it.
 _CPU_CANDIDATES = ("dense", "goap")
-_TPU_CANDIDATES = ("dense", "goap", "pallas")
+_TPU_CANDIDATES = ("dense", "goap", "pallas", "pallas_fused")
+
+# Backends whose fast path is the whole-network fused kernel, not the
+# layer-by-layer bound program: raced through a compiled plan's
+# ``preferred_batch`` so the stopwatch times what would actually serve.
+_FUSED_BACKENDS = ("pallas_fused",)
+
+
+@dataclasses.dataclass(frozen=True)
+class _FusedBinding:
+    """Minimal bound-program stand-in for fused-kernel candidates (the
+    engine's ``make_fn`` only touches ``.batch`` and ``.backend``)."""
+
+    backend: str
+    batch: Callable
 
 
 def default_candidates(quantized: bool = False) -> Tuple[str, ...]:
@@ -118,8 +132,16 @@ def autotune_backend(
                 # a candidate that raised mid-bind must not skew the next
                 # candidate's layer-order fake-quant index
                 quant_fn.reset()
-            bound = program._bind(params, name, masks=masks,
-                                  quant_fn=quant_fn)
+            if name in _FUSED_BACKENDS:
+                from repro.plan import compile_plan
+
+                plan = compile_plan(program, params, masks=masks,
+                                    quant_fn=quant_fn, assignment=name)
+                bound = _FusedBinding(backend=name,
+                                      batch=plan.preferred_batch())
+            else:
+                bound = program._bind(params, name, masks=masks,
+                                      quant_fn=quant_fn)
             fn = jax.jit(bound.batch) if make_fn is None else make_fn(bound)
             timings[name] = _time_steady_state(fn, probe, reps, budget_s)
         except Exception as e:  # noqa: BLE001 — any failure disqualifies

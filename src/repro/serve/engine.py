@@ -252,7 +252,7 @@ class AMCServeEngine:
                                                         quant_bits,
                                                         backend),
                                  assignment=backend)
-        self._fwd = jax.jit(self.plan.bound.batch)
+        self._fwd = jax.jit(self.plan.preferred_batch())
 
     def _encode(self, chunk: np.ndarray) -> np.ndarray:
         """Host-side Σ-Δ encode; the fixed backend gets the integer path."""
@@ -438,7 +438,7 @@ class AsyncAMCServeEngine:
                                                             quant_bits,
                                                             backend),
                                      assignment=backend)
-            self._step = self._wrap_batch_fn(self.plan.bound.batch,
+            self._step = self._wrap_batch_fn(self.plan.preferred_batch(),
                                              int_encode=_uses_fixed(backend))
 
         if warmup:  # pre-compile every bucket shape so serving never stalls
@@ -656,7 +656,7 @@ class AsyncAMCServeEngine:
                 qfn = _quant_fn_for(lsq_scales, bits, backend)
             plan = compile_plan(self.program, params, masks=masks,
                                 quant_fn=qfn, assignment=backend)
-            step = self._wrap_batch_fn(plan.bound.batch,
+            step = self._wrap_batch_fn(plan.preferred_batch(),
                                        int_encode=_uses_fixed(backend))
         sparse = sparsify_params(params, masks) if self.count_activity else None
         if warmup:  # pre-compile every bucket so the flip never stalls

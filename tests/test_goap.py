@@ -14,7 +14,10 @@ from repro.core.goap import (
     build_shift_buffer,
     conv1d_dense_oracle,
     goap_conv_nnz,
+    goap_conv_packed,
     goap_conv_reference,
+    goap_conv_reference_loop,
+    goap_pack,
 )
 from repro.core.sparse_format import coo_from_dense, weight_mask_from_dense
 
@@ -51,6 +54,44 @@ def test_goap_equals_dense_oracle(case):
     ref = goap_conv_reference(ifm, coo)
     np.testing.assert_allclose(goap, dense, rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(ref, dense, rtol=1e-5, atol=1e-5)
+
+
+def test_vectorized_reference_bit_equals_literal_loop():
+    """The vectorized numpy reference must be *bit-identical* to the
+    literal per-weight double loop it replaced: ``np.add.at`` is
+    unbuffered and applies contributions in index order, so the float64
+    accumulation order is the same.  Pinned across seeds and the nnz=0 /
+    fully-dense edges."""
+    cases = [(s, 3, 2, 4, 12, 0.5, 0.5) for s in range(5)]
+    cases += [(7, 3, 2, 4, 12, 0.0, 0.5),    # nnz = 0
+              (8, 5, 3, 6, 16, 1.0, 0.7)]    # fully dense
+    for seed, kw, ic, oc, wi, wd, sd in cases:
+        k, ifm = _case(seed, kw, ic, oc, wi, wd, sd)
+        coo = coo_from_dense(k)
+        vec = goap_conv_reference(ifm, coo)
+        loop = goap_conv_reference_loop(ifm, coo)
+        assert np.array_equal(vec, loop), (
+            f"seed {seed}: vectorized reference is not bit-identical "
+            f"to the literal loop")
+
+
+def test_packed_equals_nnz_and_dense():
+    """The plan-compile-time packed layout (dense-gather + einsum) must
+    agree with the gather/segment_sum path and the dense oracle,
+    including the nnz=0 degenerate pack."""
+    cases = [(s, 3, 2, 4, 12, 0.5, 0.5) for s in range(5)]
+    cases += [(7, 3, 2, 4, 12, 0.0, 0.5),
+              (8, 5, 3, 6, 16, 1.0, 0.7)]
+    for seed, kw, ic, oc, wi, wd, sd in cases:
+        k, ifm = _case(seed, kw, ic, oc, wi, wd, sd)
+        coo = coo_from_dense(k)
+        pack = goap_pack(coo)
+        dense = np.asarray(conv1d_dense_oracle(jnp.asarray(ifm),
+                                               jnp.asarray(k)))
+        packed = np.asarray(goap_conv_packed(jnp.asarray(ifm), pack))
+        nnz = np.asarray(goap_conv_nnz(jnp.asarray(ifm), coo))
+        np.testing.assert_allclose(packed, dense, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(packed, nnz, rtol=1e-6, atol=1e-6)
 
 
 def test_shift_buffer_layout():
