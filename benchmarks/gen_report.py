@@ -86,6 +86,25 @@ def fixed_md() -> str:
     return "\n".join([head, sep] + rows) + tail
 
 
+def obs_md() -> str:
+    """Digest of the observability overhead + activity-gauge artifact."""
+    res = _bench_json("obs")
+    if res is None:
+        return "_no observability artifact (run benchmarks/obs_bench.py)_"
+    o = res["overhead"]
+    s = res["activity_sanity"]
+    best = min(o["attempts"], key=lambda p: p["throughput_overhead"])
+    return (f"Full per-request tracing (sample 1:1) costs "
+            f"{o['best_throughput_overhead']:+.1%} throughput at best "
+            f"(p99 delta {best['p99_delta_ms']:+.2f}ms) over "
+            f"{res['n_frames']} frames, absorbing "
+            f"{o['spans_per_s']:.0f} spans/s — bar {res['overhead_bar']:.0%}: "
+            f"{'PASS' if o['pass'] else 'FAIL'}. Live activity gauges vs "
+            f"Tables I/III accumulation goldens: "
+            f"{'EXACT' if s['exact'] else 'DIVERGED'} "
+            f"({s['total']} vs {s['golden_total']}).")
+
+
 def streaming_md() -> str:
     """Digest of the streaming-SNN kernel roofline + measured fractions."""
     roof = _bench_json("roofline")
@@ -181,6 +200,7 @@ def main(argv=None) -> int:
     print("\n## Channel robustness\n\n" + robustness_md())
     print("\n## Fixed-point tier\n\n" + fixed_md())
     print("\n## Streaming-kernel roofline\n\n" + streaming_md())
+    print("\n## Observability\n\n" + obs_md())
     if args.write:
         p = pathlib.Path("EXPERIMENTS.md")
         txt = p.read_text()

@@ -8,9 +8,12 @@ sweep (several CPU-minutes); ``--only <name>`` runs one module.
 ``--check-regression`` is the perf gate: it reruns ``fusion_bench`` at
 the committed batch size and exit-fails if any backend's
 ``fused_speedup`` or layered fps dropped more than ``--tolerance``
-(default 20%) below the committed ``BENCH_fusion.json``.  CI runs it on
-every push so a change that silently slows the fused streaming path (or
-de-fuses it) turns the build red.
+(default 20%) below the committed ``BENCH_fusion.json``.  It then runs
+the observability gate (``obs_bench``): tracing overhead must stay under
+its absolute bar and the live activity gauges must reproduce the
+Tables I/III goldens exactly.  CI runs it on every push so a change that
+silently slows the fused streaming path (or de-fuses it, or makes
+tracing expensive) turns the build red.
 """
 from __future__ import annotations
 
@@ -32,6 +35,7 @@ def _modules(quick: bool):
         fleet_bench,
         fusion_bench,
         kernel_bench,
+        obs_bench,
         robustness_bench,
         roofline,
         serve_bench,
@@ -47,10 +51,11 @@ def _modules(quick: bool):
         # several CPU-minutes each: training sweep, full 4096-frame serve
         # run, the hot-swap-under-load deployment bench, the
         # scenario-robustness sweep across all four backends, the
-        # float-vs-fixed fidelity sweep of the integer tier, and the
-        # open-loop fleet load/autoscaling harness
+        # float-vs-fixed fidelity sweep of the integer tier, the
+        # open-loop fleet load/autoscaling harness, and the observability
+        # overhead gate
         mods.extend([accuracy_sweep, serve_bench, deploy_bench,
-                     robustness_bench, fixed_bench, fleet_bench])
+                     robustness_bench, fixed_bench, fleet_bench, obs_bench])
     return mods
 
 
@@ -103,7 +108,7 @@ def check_regression(baseline: pathlib.Path, tolerance: float,
     gate keeps the best value per metric over up to ``attempts`` fresh
     runs and only fails if a floor is still unmet after the last.
     """
-    from . import fusion_bench
+    from . import fusion_bench, obs_bench
 
     base = json.loads(baseline.read_text())
     print(f"perf gate: baseline {baseline} "
@@ -129,6 +134,20 @@ def check_regression(baseline: pathlib.Path, tolerance: float,
         return 1
     print(f"perf gate OK ({len(base['execution'])} backends, "
           f"tolerance {tolerance:.0%})")
+
+    # Observability gate: tracing overhead and activity-gauge fidelity are
+    # within-run comparisons, so no committed baseline (and no machine
+    # calibration) is needed — the bar is absolute.
+    print("\nobs gate: traced-vs-untraced overhead + activity gauges")
+    obs_res = obs_bench.run(n_frames=512, attempts=attempts)
+    print(obs_bench.format_table(obs_res))
+    obs_failures = obs_bench.check(obs_res)
+    if obs_failures:
+        print("obs gate FAILED:")
+        for f in obs_failures:
+            print(f"  - {f}")
+        return 1
+    print("obs gate OK")
     return 0
 
 

@@ -49,6 +49,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.channel import stable_seed
+from repro.obs.metrics import default_registry
 
 __all__ = ["MonitorConfig", "WindowResult", "CanaryMonitor"]
 
@@ -147,6 +148,20 @@ class CanaryMonitor:
         self._clean_rounds = 0
         for label in (baseline, canary):
             engine.get_version(label)  # fail fast on unbound labels
+        # structured registry mirror of the monitor's lifecycle
+        reg = default_registry()
+        self._m_rounds = reg.counter(
+            "repro_canary_rounds_total",
+            "Shadow-evaluation rounds run per canary",
+            ("canary",)).labels(canary=canary)
+        self._m_decisions = reg.counter(
+            "repro_canary_decisions_total",
+            "Terminal canary decisions by kind",
+            ("decision", "canary"))
+        self._m_clean = reg.gauge(
+            "repro_canary_clean_rounds",
+            "Consecutive clean (regression-free) rounds so far",
+            ("canary",)).labels(canary=canary)
 
     # -- shadow evaluation --------------------------------------------------
 
@@ -242,8 +257,11 @@ class CanaryMonitor:
             self.engine.remove_version(self.canary)
 
     def _enact_promote(self) -> None:
+        from repro.deploy.swap import mark_production
+
         self.engine.swap_to(self.canary)
         self.engine.set_router(None)
+        mark_production(self.canary)
         if self.registry is not None and self.canary_spec:
             name, version = self.registry.resolve(self.canary_spec)
             self.registry.set_alias(name, "production", version)
@@ -255,6 +273,7 @@ class CanaryMonitor:
         if self.decision != "pending":
             return self.decision
         self.evaluate_round()
+        self._m_rounds.inc()
         decision, reason = self._check()
         self.reason = reason
         if decision == "rollback":
@@ -267,6 +286,10 @@ class CanaryMonitor:
             # warm-up rounds gather evidence but are not regression-checked
             # — only checked-and-clean rounds count toward promote_after
             self._clean_rounds += 1
+        self._m_clean.set(self._clean_rounds)
+        if self.decision != "pending":
+            self._m_decisions.labels(decision=self.decision,
+                                     canary=self.canary).inc()
         return self.decision
 
     def run(self, max_rounds: int = 10,

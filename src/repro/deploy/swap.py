@@ -28,9 +28,28 @@ import time
 from typing import Any, Dict, Optional
 
 from repro.deploy.registry import ModelRegistry
+from repro.obs.metrics import default_registry
 
 __all__ = ["SwapReport", "hot_swap", "hot_swap_async",
-           "hot_swap_from_registry"]
+           "hot_swap_from_registry", "mark_production"]
+
+#: Histogram bounds for bind/flip durations (seconds): swaps are rare,
+#: seconds-scale events, so the default latency ladder is too fine.
+_SWAP_BUCKETS = (0.01, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
+
+
+def mark_production(label: str) -> None:
+    """Flag ``label`` as the production version in the metrics registry.
+
+    Prometheus "info" pattern: the gauge family
+    ``repro_deploy_production_info{version=...}`` holds exactly one child
+    at 1 (all previously-marked versions drop to 0), so a scrape joins
+    metrics against the serving version without a registry reset.
+    """
+    default_registry().gauge(
+        "repro_deploy_production_info",
+        "1 on the label currently marked production, 0 on prior labels",
+        ("version",)).set_exclusive(version=label)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +102,17 @@ def hot_swap(
     old = engine.swap_to(label)
     drained = engine.batcher.drain_barrier(timeout=drain_timeout)
     flip_s = time.perf_counter() - t1
+    reg = default_registry()
+    reg.counter("repro_deploy_swaps_total", "Completed hot-swaps by outcome",
+                ("outcome",)).labels(
+        outcome="drained" if drained else "drain-timeout").inc()
+    reg.histogram("repro_deploy_bind_seconds",
+                  "Off-hot-path bind time (compile + bucket warmup)",
+                  buckets=_SWAP_BUCKETS).observe(bind_s)
+    reg.histogram("repro_deploy_flip_seconds",
+                  "swap_to() through the pre-flip backlog drain",
+                  buckets=_SWAP_BUCKETS).observe(flip_s)
+    mark_production(label)
     return SwapReport(
         old_label=old, new_label=label, backend=ver.backend, bind_s=bind_s,
         flip_s=flip_s, queued_at_flip=queued, drained=drained,

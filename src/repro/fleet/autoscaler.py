@@ -29,6 +29,8 @@ import threading
 import time
 from typing import Any, Dict, List, Optional
 
+from repro.obs.metrics import default_registry
+
 __all__ = ["AutoscaleTick", "Autoscaler"]
 
 
@@ -97,6 +99,23 @@ class Autoscaler:
         self._last: Optional[Dict[str, Any]] = None
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        # structured registry mirror of every control tick: action-labeled
+        # tick counter plus the raw signals the decision was made on
+        reg = default_registry()
+        self._m_ticks = reg.counter(
+            "repro_autoscale_ticks_total",
+            "Autoscaler control ticks by resulting action", ("action",))
+        self._m_p99 = reg.gauge(
+            "repro_autoscale_p99_ms", "Fleet p99 (ms) at the last tick")
+        self._m_util = reg.gauge(
+            "repro_autoscale_utilization",
+            "Windowed worker utilization at the last tick")
+        self._m_depth = reg.gauge(
+            "repro_autoscale_queue_depth",
+            "Fleet queue depth at the last tick")
+        self._m_replicas = reg.gauge(
+            "repro_autoscale_replicas",
+            "Replica count observed at the last tick")
 
     # -- one deterministic control tick -------------------------------------
 
@@ -171,6 +190,11 @@ class Autoscaler:
             action=action, reason=reason)
         self._tick += 1
         self.trace.append(tick)
+        self._m_ticks.labels(action=action).inc()
+        self._m_p99.set(p99)
+        self._m_util.set(util)
+        self._m_depth.set(depth)
+        self._m_replicas.set(n)
         return tick
 
     def trace_summary(self) -> List[Dict[str, Any]]:

@@ -44,6 +44,8 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs.metrics import default_registry
+from repro.obs.trace import begin_trace, tadd, tfinish
 from repro.serve.batcher import PRIORITIES, EngineClosed, QueueFull
 from repro.serve.engine import ServeStats
 
@@ -94,18 +96,45 @@ def engine_factory(params, cfg, masks=None, **engine_kwargs):
     from repro.serve.engine import AsyncAMCServeEngine
 
     def make(name: str):
-        return AsyncAMCServeEngine(params, cfg, masks=masks, **engine_kwargs)
+        kw = dict(engine_kwargs)
+        # the replica name becomes the {engine=...} label on every serve
+        # metric, keeping fleet-wide aggregates separable per replica
+        kw.setdefault("name", name)
+        return AsyncAMCServeEngine(params, cfg, masks=masks, **kw)
 
     return make
+
+
+def _fair_recent(parts: List[List[float]], cap: int) -> List[float]:
+    """Concatenate sample windows, trimming *each part's* oldest samples.
+
+    When the combined history exceeds ``cap``, every part contributes its
+    most recent ``cap // n_parts`` samples.  Sequential concatenate-then-
+    trim would instead keep whichever replicas happened to be appended
+    last — with full windows, the merged percentiles would be computed
+    over the *final replica only*, silently dropping every other
+    replica's tail latencies (the bug pinned by
+    ``test_merge_stats_fair_window`` in ``tests/test_fleet.py``).
+    """
+    total = sum(len(x) for x in parts)
+    if total > cap and len(parts) > 1:
+        share = max(1, cap // len(parts))
+        parts = [x[-share:] for x in parts]
+    out: List[float] = []
+    for x in parts:
+        out.extend(x)
+    return out[-cap:]
 
 
 def merge_stats(parts: List[ServeStats], backend: str = "") -> ServeStats:
     """Aggregate per-replica :class:`ServeStats` into one fleet view.
 
-    Counters add exactly; latency / queue-depth histories concatenate
-    (bounded by the class's own window); ``wall_s`` takes the widest
-    serving window so fleet throughput is conservative, never inflated by
-    summing overlapping windows.
+    Counters add exactly; latency / queue-depth histories concatenate,
+    and when the combined history exceeds the class window every replica
+    contributes an equal share of its most recent samples (so merged
+    percentiles represent the whole fleet, not the last-merged replica);
+    ``wall_s`` takes the widest serving window so fleet throughput is
+    conservative, never inflated by summing overlapping windows.
     """
     merged = ServeStats(backend=backend)
     for p in parts:
@@ -117,14 +146,13 @@ def merge_stats(parts: List[ServeStats], backend: str = "") -> ServeStats:
         merged.fetched_bits += p.fetched_bits
         merged.padded_frames += p.padded_frames
         merged.wall_s = max(merged.wall_s, p.wall_s)
-        merged.record_latencies(list(p.latencies_s))
-        for depth in list(p.queue_depths):
-            merged.queue_depths.append(depth)
         for b, n in p.backend_batch_counts().items():
             merged.backend_batch_totals[b] = (
                 merged.backend_batch_totals.get(b, 0) + n)
-    if len(merged.queue_depths) > merged.MAX_SAMPLES:
-        del merged.queue_depths[: -merged.MAX_SAMPLES]
+    merged.latencies_s = _fair_recent(
+        [list(p.latencies_s) for p in parts], ServeStats.MAX_SAMPLES)
+    merged.queue_depths = [int(d) for d in _fair_recent(
+        [list(p.queue_depths) for p in parts], ServeStats.MAX_SAMPLES)]
     return merged
 
 
@@ -222,12 +250,24 @@ class FleetRouter:
         self.shed_by_reason: Dict[str, int] = {"queue": 0, "p99": 0}
         self.shed_by_priority: Dict[str, int] = {p: 0 for p in PRIORITIES}
         self.n_submitted = 0
+        # registry mirrors of the door-level counters
+        reg = default_registry()
+        self._m_submitted = reg.counter(
+            "repro_fleet_submitted_total",
+            "Requests admitted through the fleet door")
+        self._m_shed = reg.counter(
+            "repro_fleet_shed_total",
+            "Requests refused by fleet admission control",
+            ("reason", "priority"))
+        self._m_replicas = reg.gauge(
+            "repro_fleet_replicas", "Live replica count")
         self.batcher = _FleetBatcher(self)
         for _ in range(replicas):
             rep = self._build_replica()
             with self._lock:
                 self._replicas.append(rep)
         self._primary = self._replicas[0].engine.active_version
+        self._m_replicas.set(self.n_replicas)
 
     # -- replica lifecycle --------------------------------------------------
 
@@ -275,6 +315,7 @@ class FleetRouter:
             rep = self._build_replica()
             with self._lock:
                 self._replicas.append(rep)
+            self._m_replicas.set(self.n_replicas)
             return rep.name
 
     def scale_down(self, drain_timeout: float = 30.0) -> Optional[str]:
@@ -302,17 +343,22 @@ class FleetRouter:
             rep.engine.close()
             with self._lock:
                 self._retired.append(rep)
+            self._m_replicas.set(self.n_replicas)
             return rep.name
 
     # -- admission / dispatch -----------------------------------------------
 
-    def _shed(self, reason: str, priority: str, detail: str) -> "ShedError":
+    def _shed(self, reason: str, priority: str, detail: str,
+              trace=None) -> "ShedError":
         with self._lock:
             self.n_shed += 1
             self.shed_by_reason[reason] = (
                 self.shed_by_reason.get(reason, 0) + 1)
             self.shed_by_priority[priority] = (
                 self.shed_by_priority.get(priority, 0) + 1)
+        self._m_shed.labels(reason=reason, priority=priority).inc()
+        tadd(trace, "shed", reason=reason, priority=priority)
+        tfinish(trace)
         return ShedError(detail, reason=reason)
 
     def submit(self, iq: np.ndarray, *, priority: Optional[str] = None,
@@ -328,11 +374,16 @@ class FleetRouter:
             raise ValueError(f"unknown priority {priority!r}")
         if deadline_ms is None:
             deadline_ms = self.default_deadline_ms
+        # the fleet door originates the request trace: replica attempts,
+        # shed decisions and the queue transit all land on one timeline
+        trace = begin_trace()
+        tadd(trace, "submit", priority=priority)
         if (self.shed_p99_ms is not None and priority == "bulk"
                 and self.recent_p99_ms() > self.shed_p99_ms):
             raise self._shed(
                 "p99", priority,
-                f"bulk traffic shed: fleet p99 above {self.shed_p99_ms}ms")
+                f"bulk traffic shed: fleet p99 above {self.shed_p99_ms}ms",
+                trace=trace)
         reps = self._snapshot()
         if not reps:
             raise RuntimeError("fleet has no replicas")
@@ -350,16 +401,23 @@ class FleetRouter:
             with rep.gate:
                 if rep.fenced:
                     continue
+                # optimistic: recorded before the enqueue so the timeline
+                # stays ordered; a refusal appends replica-full after it
+                tadd(trace, "admit", replica=rep.name)
                 try:
                     fut = rep.engine.submit(iq, deadline_ms=deadline_ms,
-                                            priority=priority)
-                except (QueueFull, EngineClosed):
+                                            priority=priority, trace=trace)
+                except (QueueFull, EngineClosed) as e:
+                    tadd(trace, "replica-full", replica=rep.name,
+                         reason=type(e).__name__)
                     continue
             with self._lock:
                 self.n_submitted += 1
+            self._m_submitted.inc()
             return fut
         raise self._shed("queue", priority,
-                         "all replica queues at their admission bound")
+                         "all replica queues at their admission bound",
+                         trace=trace)
 
     def classify(self, iq: np.ndarray, timeout: float = 300.0, *,
                  priority: Optional[str] = None,
@@ -532,6 +590,7 @@ class FleetRouter:
                     rep.fenced = True  # a request the close will fail
             for rep in reps:
                 rep.engine.close()
+            self._m_replicas.set(0)
 
     def __enter__(self) -> "FleetRouter":
         return self

@@ -107,6 +107,21 @@ def main(argv=None) -> int:
                          "primary (async engine only)")
     ap.add_argument("--canary-pct", type=float, default=10.0,
                     help="percent of batches routed to the canary")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="saocds-amc: serve /metrics (Prometheus text), "
+                         "/healthz and /trace on this port for the run's "
+                         "duration (0 picks a free port)")
+    ap.add_argument("--metrics-host", default="127.0.0.1",
+                    help="bind address for --metrics-port")
+    ap.add_argument("--trace-dump", default=None, metavar="PATH",
+                    help="saocds-amc: enable request tracing and write the "
+                         "completed span timelines to PATH as JSON")
+    ap.add_argument("--trace-sample", type=int, default=1,
+                    help="trace every Nth request (deterministic; 1 = all)")
+    ap.add_argument("--hold-s", type=float, default=0.0,
+                    help="keep the metrics endpoint alive this many "
+                         "seconds after serving finishes (lets a scraper "
+                         "or CI curl the final state)")
     args = ap.parse_args(argv)
 
     if args.arch == "saocds-amc":
@@ -115,6 +130,22 @@ def main(argv=None) -> int:
         from repro.models.snn import init_snn
         from repro.serve import AMCServeEngine, AsyncAMCServeEngine
         from repro.train.pruning import make_mask_pytree
+
+        # observability first: the exposition endpoint and the tracer must
+        # exist before the engine binds (bind-time schedule gauges) and
+        # before the first submit (trace timelines start at the door)
+        metrics_server = None
+        if args.metrics_port is not None:
+            from repro.obs import MetricsServer
+
+            metrics_server = MetricsServer(host=args.metrics_host,
+                                           port=args.metrics_port)
+            print(f"metrics: http://{metrics_server.host}"
+                  f":{metrics_server.port}/metrics")
+        if args.trace_dump:
+            from repro.obs import enable_tracing
+
+            enable_tracing(sample_every=max(1, args.trace_sample))
 
         SNN_CONFIG = CONFIG
         registry = canary_loaded = None
@@ -280,6 +311,22 @@ def main(argv=None) -> int:
               f"fetched_bits={st.fetched_bits}")
         print(f"(untrained net) agreement with labels: "
               f"{float((preds == labels).mean()):.3f}")
+        if args.trace_dump:
+            import json
+
+            from repro.obs import get_tracer
+
+            dump = get_tracer().dump()
+            with open(args.trace_dump, "w") as f:
+                json.dump(dump, f, indent=2)
+            print(f"trace: {dump['n_completed']} of {dump['n_seen']} "
+                  f"requests traced -> {args.trace_dump}")
+        if metrics_server is not None:
+            # dump is already on disk: a CI killing the hold early still
+            # finds the artifact, and the scrape below sees final totals
+            if args.hold_s > 0:
+                time.sleep(args.hold_s)
+            metrics_server.close()
         return 0
 
     from repro.models.lm import init_lm

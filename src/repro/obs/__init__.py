@@ -1,0 +1,50 @@
+"""End-to-end observability: metrics registry, request tracing, activity
+telemetry, and the HTTP exposition endpoint.
+
+See README "Observability" for the metric naming scheme and examples.
+"""
+from repro.obs.activity import (
+    SCHEDULE_KEYS,
+    ActivityObserver,
+    static_schedule_counts,
+)
+from repro.obs.http import MetricsServer
+from repro.obs.metrics import (
+    DEFAULT_LATENCY_BUCKETS,
+    MetricsRegistry,
+    default_registry,
+    set_default_registry,
+)
+from repro.obs.trace import (
+    TERMINAL_EVENTS,
+    RequestTrace,
+    TraceEvent,
+    TraceLog,
+    begin_trace,
+    disable_tracing,
+    enable_tracing,
+    get_tracer,
+    tadd,
+    tfinish,
+)
+
+__all__ = [
+    "MetricsRegistry",
+    "default_registry",
+    "set_default_registry",
+    "DEFAULT_LATENCY_BUCKETS",
+    "TraceEvent",
+    "RequestTrace",
+    "TraceLog",
+    "TERMINAL_EVENTS",
+    "enable_tracing",
+    "disable_tracing",
+    "get_tracer",
+    "begin_trace",
+    "tadd",
+    "tfinish",
+    "ActivityObserver",
+    "static_schedule_counts",
+    "SCHEDULE_KEYS",
+    "MetricsServer",
+]

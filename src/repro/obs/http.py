@@ -1,0 +1,103 @@
+"""Stdlib HTTP exposition endpoint: ``/metrics`` + ``/healthz`` (+ ``/trace``).
+
+A :class:`MetricsServer` runs a ``ThreadingHTTPServer`` on a daemon
+thread — the shape a scraper (Prometheus, a curl in CI) expects, with no
+dependency beyond the standard library:
+
+* ``GET /metrics``  — text exposition format 0.0.4 of the registry;
+* ``GET /healthz``  — ``{"status": "ok", "uptime_s": ...}`` liveness;
+* ``GET /trace``    — the active :class:`~repro.obs.trace.TraceLog`'s
+  JSON dump (404 when tracing is disabled).
+
+The registry and tracer are resolved **per request** (defaulting to the
+process-wide ones), so a server started before ``enable_tracing`` still
+serves traces, and a test swapping the default registry is immediately
+visible on the next scrape.  ``port=0`` binds an ephemeral port
+(``server.port`` reports it) — what the tests use.
+"""
+from __future__ import annotations
+
+import http.server
+import json
+import threading
+import time
+from typing import Optional
+
+from repro.obs.metrics import MetricsRegistry, default_registry
+from repro.obs.trace import get_tracer
+
+__all__ = ["MetricsServer"]
+
+
+class MetricsServer:
+    """Background ``/metrics`` + ``/healthz`` + ``/trace`` HTTP endpoint."""
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 host: str = "127.0.0.1", port: int = 0):
+        self._registry = registry
+        self._t_started = time.perf_counter()
+        outer = self
+
+        class Handler(http.server.BaseHTTPRequestHandler):
+            def log_message(self, *args):  # noqa: D102 — silence stderr
+                pass
+
+            def _send(self, code: int, body: bytes, ctype: str) -> None:
+                self.send_response(code)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def do_GET(self):  # noqa: N802 — http.server API
+                path = self.path.split("?", 1)[0]
+                try:
+                    if path == "/metrics":
+                        reg = (outer._registry if outer._registry is not None
+                               else default_registry())
+                        self._send(
+                            200, reg.to_prometheus().encode(),
+                            "text/plain; version=0.0.4; charset=utf-8")
+                    elif path == "/healthz":
+                        body = json.dumps({
+                            "status": "ok",
+                            "uptime_s":
+                                time.perf_counter() - outer._t_started,
+                        }).encode()
+                        self._send(200, body, "application/json")
+                    elif path == "/trace":
+                        tracer = get_tracer()
+                        if tracer is None:
+                            self._send(404, b'{"error": "tracing disabled"}',
+                                       "application/json")
+                        else:
+                            self._send(200,
+                                       json.dumps(tracer.dump()).encode(),
+                                       "application/json")
+                    else:
+                        self._send(404, b"not found", "text/plain")
+                except (BrokenPipeError, ConnectionResetError):
+                    pass  # scraper went away mid-response
+
+        self._server = http.server.ThreadingHTTPServer((host, port), Handler)
+        self._server.daemon_threads = True
+        self.host = host
+        self.port = int(self._server.server_address[1])
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, daemon=True,
+            name=f"obs-metrics-{self.port}")
+        self._thread.start()
+
+    def url(self, path: str = "/metrics") -> str:
+        return f"http://{self.host}:{self.port}{path}"
+
+    def close(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "MetricsServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

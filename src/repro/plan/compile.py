@@ -30,6 +30,7 @@ from typing import Any, Callable, Dict, Mapping, Optional, Tuple, Union
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from repro.models.graph import (
     KIND_CONV,
@@ -252,6 +253,44 @@ class ExecutionPlan:
         layer-by-layer bound path (which beats the generic single-scan
         executor on XLA:CPU — see BENCH_fusion.json)."""
         return self.batch if self.fused_stack() is not None else self.bound.batch
+
+    @property
+    def supports_live_counters(self) -> bool:
+        """True when :meth:`batch_counters` can report per-batch gated
+        accumulation counts (Table III) alongside the logits — i.e. the
+        assignment's conv layers all count in-graph (``stream`` schedule
+        interpreter or the fused multi-layer kernel)."""
+        if self.fused_stack() is not None:
+            return True
+        return all(lp.backend == "stream" for lp in self.layers
+                   if lp.spec.kind == KIND_CONV)
+
+    def batch_counters(self, frames_b: jax.Array):
+        """(B, T, IC0, W) -> (logits (B, n_classes), {conv_name: (B,) accs}).
+
+        The counter-returning twin of :meth:`batch` — same logits, plus
+        per-sample gated accumulation counts for every conv layer.  The
+        fused stack already carries the counts in its carry (free); the
+        vmapped streaming path extracts only the ``accumulations`` array
+        leaf inside the closure so the static int leaves of the counter
+        dict never hit vmap.  Counts are float32 throughout; exact below
+        2**24 events/frame (paper config peaks at 437602).
+        """
+        stack = self.fused_stack()
+        if stack is not None:
+            from repro.kernels.stream_fused import stream_fused_forward
+
+            logits, accs = stream_fused_forward(stack, frames_b)
+            return logits, {name: accs[:, i]
+                            for i, name in enumerate(stack.conv_names)}
+
+        def one(frames):
+            logits, counters = self.run_streaming(frames)
+            return logits, {name: jnp.asarray(c["accumulations"], jnp.float32)
+                            for name, c in counters.items()
+                            if "accumulations" in c}
+
+        return jax.vmap(one)(frames_b)
 
     def cost_priors(self) -> Dict[str, Dict[str, float]]:
         """Per weighted layer: predicted relative cost per backend."""

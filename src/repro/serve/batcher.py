@@ -53,6 +53,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.trace import tadd, tfinish
+
 __all__ = [
     "ServeFuture",
     "Request",
@@ -85,7 +87,13 @@ class ServeFuture(concurrent.futures.Future):
     until the micro-batch containing this request has been served, or
     raises the worker's exception / a shutdown ``RuntimeError`` / a
     :class:`DeadlineExceeded` if the request expired while queued.
+
+    ``trace`` carries the request's :class:`~repro.obs.trace.RequestTrace`
+    (None when tracing is off / unsampled) so callers holding only the
+    future can read the span timeline after resolution.
     """
+
+    trace = None
 
 
 class DeadlineExceeded(RuntimeError):
@@ -115,6 +123,7 @@ class Request:
     future: ServeFuture
     deadline: Optional[float] = None   # absolute, on the batcher's clock
     priority: str = "realtime"
+    trace: Optional[object] = None     # RequestTrace (None when untraced)
 
 
 @dataclasses.dataclass
@@ -179,6 +188,7 @@ class MicroBatcher:
         priority_weights: Optional[Dict[str, float]] = None,
         pace_ms: float = 0.0,
         clock=time.perf_counter,
+        obs_counters: Optional[Dict[str, object]] = None,
     ):
         self.frame_shape = tuple(frame_shape)
         if buckets:
@@ -239,6 +249,14 @@ class MicroBatcher:
         self.n_expired = 0     # requests failed fast on a passed deadline
         self.n_rejected = 0    # submits refused by the max_queue bound
         self.n_cancelled = 0   # cancelled futures dropped at dequeue
+        # optional registry mirrors ({"expired"/"rejected"/"cancelled":
+        # inc()-able}) — the engine wires its labeled metric children here
+        self._obs = dict(obs_counters or {})
+
+    def _obs_inc(self, key: str) -> None:
+        c = self._obs.get(key)
+        if c is not None:
+            c.inc()
 
     # -- producer side ------------------------------------------------------
 
@@ -247,13 +265,16 @@ class MicroBatcher:
         return self._clock()
 
     def submit(self, iq: np.ndarray, *, deadline: Optional[float] = None,
-               priority: str = "realtime") -> ServeFuture:
+               priority: str = "realtime", trace=None) -> ServeFuture:
         """Enqueue one (IC, L) frame; returns a future for its prediction.
 
         ``deadline`` is absolute (``batcher.now() + budget_s``); ``None``
         never expires.  Raises :class:`QueueFull` when the ``max_queue``
         admission bound is hit — the caller (router) sheds instead of
-        queueing unboundedly.
+        queueing unboundedly.  ``trace`` is the request's optional
+        :class:`~repro.obs.trace.RequestTrace`; the batcher records the
+        queue-transit events on it (the *caller* records the terminal on
+        an admission refusal — a router may retry another replica).
         """
         iq = np.asarray(iq, dtype=np.float32)
         if iq.shape != self.frame_shape:
@@ -268,16 +289,20 @@ class MicroBatcher:
             if (self.max_queue is not None
                     and self._depth_locked() >= self.max_queue):
                 self.n_rejected += 1
+                self._obs_inc("rejected")
                 raise QueueFull(
                     f"admission rejected: {self.max_queue} requests queued")
             fut = ServeFuture()
+            fut.trace = trace
             seq = next(self._seq)
             self._last_seq = seq
             with self._handed:
                 heapq.heappush(self._unhanded, seq)
+            tadd(trace, "enqueue", queue_depth=self._depth_locked(),
+                 priority=priority)
             self._pending[priority].append(
                 Request(seq=seq, iq=iq, t_enqueue=self._clock(), future=fut,
-                        deadline=deadline, priority=priority))
+                        deadline=deadline, priority=priority, trace=trace))
             self._cond.notify()
         return fut
 
@@ -383,13 +408,20 @@ class MicroBatcher:
             r = self._pending[pick].popleft()
             if r.future.cancelled():
                 self.n_cancelled += 1
+                self._obs_inc("cancelled")
+                tadd(r.trace, "cancelled", at="dequeue")
+                tfinish(r.trace)
                 self._mark_handed(r.seq)
                 continue
             if r.deadline is not None and now > r.deadline:
                 self.n_expired += 1
+                self._obs_inc("expired")
+                tadd(r.trace, "expired", at="dequeue")
+                tfinish(r.trace)
                 self._mark_handed(r.seq)
                 expired.append(r)
                 continue
+            tadd(r.trace, "dequeue")
             return r
 
     #: sentinel: a gathering round ended with no live request — fail its
@@ -428,8 +460,13 @@ class MicroBatcher:
             bucket = bucket_for(len(reqs), self.buckets)
             frames = np.zeros((bucket,) + self.frame_shape,
                               dtype=np.float32)
+            # trace timestamps stay on perf_counter even under a fake
+            # batcher clock — spans must be comparable across events
+            t_form = time.perf_counter()
             for i, r in enumerate(reqs):
                 frames[i] = r.iq
+                tadd(r.trace, "batch-form", t=t_form, bucket=bucket,
+                     n_real=len(reqs), n_padded=bucket - len(reqs))
             return MicroBatch(requests=reqs, bucket=bucket, frames=frames,
                               queue_depth=depth)
 
@@ -493,8 +530,14 @@ class MicroBatcher:
         for r in reqs:
             if r.future.cancelled():
                 self.n_cancelled += 1
+                self._obs_inc("cancelled")
+                tadd(r.trace, "cancelled", at="flush")
+                tfinish(r.trace)
             elif r.deadline is not None and now > r.deadline:
                 self.n_expired += 1
+                self._obs_inc("expired")
+                tadd(r.trace, "expired", at="flush")
+                tfinish(r.trace)
                 expired.append(r)
             else:
                 live.append(r)

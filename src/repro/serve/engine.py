@@ -64,7 +64,10 @@ from repro.serve.autotune import (
     autotune_backend,
     autotune_per_layer,
 )
-from repro.serve.batcher import MicroBatcher
+from repro.obs.activity import ActivityObserver
+from repro.obs.metrics import default_registry
+from repro.obs.trace import begin_trace, tadd, tfinish
+from repro.serve.batcher import EngineClosed, MicroBatcher, QueueFull
 
 __all__ = ["AMCServeEngine", "AsyncAMCServeEngine", "ServeStats",
            "BoundVersion"]
@@ -314,6 +317,10 @@ class BoundVersion:
     # requests it served) — a late-bound canary's wall_s/throughput must
     # not be diluted by traffic that predates its bind
     t_first: float = float("inf")
+    # live-counter mode: the version's step returns (logits, per-conv
+    # accumulation counts) and this ActivityObserver records them; None
+    # means the step returns bare logits
+    activity: Any = dataclasses.field(default=None, repr=False)
 
 
 class AsyncAMCServeEngine:
@@ -361,12 +368,19 @@ class AsyncAMCServeEngine:
         version_label: str = "default",
         lsq_scales=None,
         quant_bits: int = 16,
+        name: Optional[str] = None,
+        activity_gauges: bool = True,
     ):
         self.cfg = cfg
         self.count_activity = count_activity
         self.quant_bits = quant_bits
         self.program = compile_snn(cfg)
         self.sparse = sparsify_params(params, masks) if count_activity else None
+        # observability identity: the {engine=...} label on every serve
+        # metric (the fleet factory passes the replica name, so fleet-wide
+        # aggregates stay separable per replica)
+        self.name = name if name is not None else "engine"
+        self.activity_gauges = activity_gauges
 
         if mesh is None and jax.local_device_count() > 1:
             from repro.distributed.sharding import serve_mesh
@@ -375,12 +389,49 @@ class AsyncAMCServeEngine:
         self.mesh = mesh
         align = int(mesh.shape["data"]) if mesh is not None else 1
 
+        # registry instrumentation: all families are idempotent creates on
+        # the process-wide registry, children pre-resolved off the hot path
+        reg = default_registry()
+        eng = self.name
+        self._m_requests = reg.counter(
+            "repro_serve_requests_total", "Requests served (real frames)",
+            ("engine",)).labels(engine=eng)
+        self._m_batches = reg.counter(
+            "repro_serve_batches_total", "Micro-batches served",
+            ("engine", "backend"))
+        self._m_padded = reg.counter(
+            "repro_serve_padded_frames_total",
+            "Zero-padded tail rows shipped in fixed-shape buckets",
+            ("engine",)).labels(engine=eng)
+        self._m_latency = reg.histogram(
+            "repro_serve_request_latency_seconds",
+            "Per-request enqueue-to-completion latency",
+            ("engine",)).labels(engine=eng)
+        self._m_qdepth = reg.gauge(
+            "repro_serve_queue_depth",
+            "Queue backlog observed at the last batch flush",
+            ("engine",)).labels(engine=eng)
+        obs_counters = {
+            "expired": reg.counter(
+                "repro_serve_expired_total",
+                "Requests failed fast on a passed deadline",
+                ("engine",)).labels(engine=eng),
+            "rejected": reg.counter(
+                "repro_serve_rejected_total",
+                "Submits refused by the max_queue admission bound",
+                ("engine",)).labels(engine=eng),
+            "cancelled": reg.counter(
+                "repro_serve_cancelled_total",
+                "Cancelled futures dropped without a batch slot",
+                ("engine",)).labels(engine=eng),
+        }
+
         ic0 = cfg.conv_specs[0][1]
         self.batcher = MicroBatcher(
             frame_shape=(ic0, cfg.input_width), max_batch=max_batch,
             max_delay_ms=max_delay_ms, buckets=buckets, align=align,
             max_queue=max_queue, pace_ms=pace_ms,
-            priority_weights=priority_weights)
+            priority_weights=priority_weights, obs_counters=obs_counters)
 
         self.autotune: Optional[AutotuneReport] = None
         self.perlayer: Optional[PerLayerAutotuneReport] = None
@@ -423,10 +474,16 @@ class AsyncAMCServeEngine:
             backend = self.autotune.choice
         self.backend = backend
         self.stats = ServeStats(backend=backend)
+        # live activity gauges need a counter-returning step: single-host
+        # only (the shard_map wrapper carries bare logits) and only for
+        # assignments whose conv layers count in-graph
+        counters_wanted = activity_gauges and mesh is None
         if self.plan is not None:           # per-layer: fused streaming step
             self._step = self._wrap_batch_fn(
                 self.plan.batch, int_encode=_uses_fixed(self.assignment))
-        elif backend in raced_steps and lsq_scales is None:
+        elif (backend in raced_steps and lsq_scales is None
+              and not (counters_wanted
+                       and backend in ("stream", "pallas_fused"))):
             # reuse the race winner's compile (without LSQ state the race
             # bind is the serving bind; with it the winner is only a
             # backend choice — the serving step is rebuilt through the
@@ -440,6 +497,13 @@ class AsyncAMCServeEngine:
                                      assignment=backend)
             self._step = self._wrap_batch_fn(self.plan.preferred_batch(),
                                              int_encode=_uses_fixed(backend))
+        self._activity: Optional[ActivityObserver] = None
+        if (counters_wanted and self.plan is not None
+                and self.plan.supports_live_counters):
+            self._step = self._wrap_batch_fn(
+                self.plan.batch_counters,
+                int_encode=_uses_fixed(self.assignment or backend))
+            self._activity = ActivityObserver(self.plan, engine=self.name)
 
         if warmup:  # pre-compile every bucket shape so serving never stalls
             for b in self.batcher.buckets:
@@ -454,7 +518,8 @@ class AsyncAMCServeEngine:
             version_label: BoundVersion(
                 label=version_label, backend=self.backend, step=self._step,
                 plan=self.plan, sparse=self.sparse,
-                stats=ServeStats(backend=self.backend)),
+                stats=ServeStats(backend=self.backend),
+                activity=self._activity),
         }
         self._primary = version_label
         self._router: Optional[Callable[[], str]] = None
@@ -536,9 +601,20 @@ class AsyncAMCServeEngine:
                 # them.  Routing runs inside the covered block: if it ever
                 # raises, the batch's futures fail instead of stranding.
                 ver = self._route()
-                logits = np.asarray(ver.step(jnp.asarray(batch.frames)))
+                t_step0 = time.perf_counter()
+                out = ver.step(jnp.asarray(batch.frames))
+                if ver.activity is not None:
+                    logits_dev, accs = out
+                    logits = np.asarray(logits_dev)
+                else:
+                    accs = None
+                    logits = np.asarray(out)
+                t_step1 = time.perf_counter()
                 preds = logits.argmax(-1).astype(np.int32)
                 n_real = batch.n_real
+                if accs is not None:
+                    ver.activity.observe(
+                        {k: np.asarray(v) for k, v in accs.items()}, n_real)
                 # activity counting is an expensive diagnostics mode; it
                 # runs outside the lock (workers stay parallel) but before
                 # the futures resolve, so a caller that reads ``stats``
@@ -577,16 +653,37 @@ class AsyncAMCServeEngine:
                         if counted is not None:
                             st.accumulations += counted.accumulations
                             st.fetched_bits += counted.fetched_bits
+                # registry mirrors (family-locked; outside the engine lock)
+                self._m_requests.inc(n_real)
+                self._m_batches.labels(engine=self.name,
+                                       backend=ver.backend).inc()
+                self._m_padded.inc(batch.n_padded)
+                self._m_qdepth.set(batch.queue_depth)
+                for r in batch.requests:
+                    self._m_latency.observe(t_done - r.t_enqueue)
+                    if r.trace is not None:
+                        # the jitted step is batch-wide: every traced rider
+                        # shares the same explicit start/end stamps
+                        r.trace.add("jit-step-start", t=t_step0,
+                                    version=ver.label, backend=ver.backend)
+                        r.trace.add("jit-step-end", t=t_step1)
                 for i, r in enumerate(batch.requests):
                     # transitions PENDING -> RUNNING (after which cancel()
                     # can no longer win the race); False = caller cancelled
                     # while queued — skip, don't poison the batch
                     if r.future.set_running_or_notify_cancel():
+                        tadd(r.trace, "complete", pred=int(preds[i]))
+                        tfinish(r.trace)
                         r.future.set_result(int(preds[i]))
+                    else:
+                        tadd(r.trace, "cancelled", at="resolve")
+                        tfinish(r.trace)
             except Exception as e:  # noqa: BLE001 — propagate to callers;
                 # the whole batch path is covered so a stats/counting error
                 # can never strand a future or kill the worker loop
                 for r in batch.requests:
+                    tadd(r.trace, "error", detail=str(e))
+                    tfinish(r.trace)
                     _fail_future(r.future, e)
             finally:
                 with self._lock:
@@ -659,6 +756,13 @@ class AsyncAMCServeEngine:
             step = self._wrap_batch_fn(plan.preferred_batch(),
                                        int_encode=_uses_fixed(backend))
         sparse = sparsify_params(params, masks) if self.count_activity else None
+        activity = None
+        if (self.activity_gauges and self.mesh is None and plan is not None
+                and plan.supports_live_counters):
+            enc = self.assignment if backend == "per-layer" else backend
+            step = self._wrap_batch_fn(plan.batch_counters,
+                                       int_encode=_uses_fixed(enc))
+            activity = ActivityObserver(plan, engine=self.name)
         if warmup:  # pre-compile every bucket so the flip never stalls
             ic0 = self.cfg.conv_specs[0][1]
             for b in self.batcher.buckets:
@@ -667,7 +771,8 @@ class AsyncAMCServeEngine:
                                    jnp.float32)))
         ver = BoundVersion(label=label, backend=backend, step=step,
                            plan=plan, sparse=sparse,
-                           stats=ServeStats(backend=backend))
+                           stats=ServeStats(backend=backend),
+                           activity=activity)
         with self._lock:
             self._versions[label] = ver
         return ver
@@ -759,17 +864,33 @@ class AsyncAMCServeEngine:
     # -- public API ---------------------------------------------------------
 
     def submit(self, iq: np.ndarray, *, deadline_ms: Optional[float] = None,
-               priority: str = "realtime"):
+               priority: str = "realtime", trace=None):
         """Enqueue one (2, L) frame; returns a ``ServeFuture``.
 
         ``deadline_ms`` is a relative latency budget: a request still
         queued when it expires fails fast with ``DeadlineExceeded``
         instead of occupying a micro-batch slot.  ``priority`` picks the
         dequeue class (``realtime`` > ``bulk``, weighted).
+
+        ``trace=None`` starts a fresh request trace when tracing is
+        enabled; a caller that already owns one (the fleet router) passes
+        it through and keeps responsibility for its failure terminals.
         """
         deadline = (None if deadline_ms is None
                     else self.batcher.now() + deadline_ms / 1e3)
-        return self.batcher.submit(iq, deadline=deadline, priority=priority)
+        owned = False
+        if trace is None:
+            trace = begin_trace()
+            owned = trace is not None
+            tadd(trace, "submit", engine=self.name, priority=priority)
+        try:
+            return self.batcher.submit(iq, deadline=deadline,
+                                       priority=priority, trace=trace)
+        except (QueueFull, EngineClosed) as e:
+            if owned:  # a router-owned trace may retry another replica
+                tadd(trace, "reject", reason=type(e).__name__)
+                tfinish(trace)
+            raise
 
     def classify(self, iq: np.ndarray, timeout: float = 300.0, *,
                  deadline_ms: Optional[float] = None,
@@ -814,6 +935,8 @@ class AsyncAMCServeEngine:
         err = RuntimeError("AsyncAMCServeEngine closed before serving "
                            "this request")
         for r in self.batcher.drain():
+            tadd(r.trace, "cancelled", at="close")
+            tfinish(r.trace)
             _fail_future(r.future, err)
 
     def __enter__(self) -> "AsyncAMCServeEngine":

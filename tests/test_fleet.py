@@ -385,6 +385,35 @@ def test_merge_stats_counters_and_window():
     assert sorted(m.latencies_s) == [0.010, 0.020, 0.030]
 
 
+def test_merge_stats_fair_window():
+    """Full per-replica windows must merge fairly, not last-writer-wins.
+
+    A slow replica and a fast replica each carry a full MAX_SAMPLES
+    history.  Concatenate-then-trim would keep only the final replica's
+    window, so the merged p99 would be whichever replica happened to be
+    listed last.  The fair merge keeps an equal share of each, and the
+    slow replica's tail must survive regardless of merge order.
+    """
+    cap = ServeStats.MAX_SAMPLES
+    slow, fast = ServeStats(backend="dense"), ServeStats(backend="dense")
+    slow.record_latencies([1.0] * cap)      # 1000 ms each
+    fast.record_latencies([0.001] * cap)    # 1 ms each
+    for order in ([slow, fast], [fast, slow]):
+        m = merge_stats(order)
+        assert len(m.latencies_s) <= cap
+        lat = np.asarray(m.latencies_s)
+        # both replicas contribute an equal share of the merged window
+        assert np.isclose((lat == 1.0).mean(), 0.5)
+        assert float(np.percentile(lat * 1e3, 99)) > 500.0
+
+    # queue depths get the same treatment (and stay ints)
+    slow.queue_depths = [9] * cap
+    fast.queue_depths = [1] * cap
+    m = merge_stats([fast, slow])
+    assert set(m.queue_depths) == {1, 9}
+    assert all(isinstance(d, int) for d in m.queue_depths)
+
+
 def test_replica_bounds_validated(weights):
     with pytest.raises(ValueError):
         FleetRouter(_factory(weights), replicas=5, max_replicas=2)
