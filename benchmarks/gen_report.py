@@ -94,15 +94,62 @@ def obs_md() -> str:
     o = res["overhead"]
     s = res["activity_sanity"]
     best = min(o["attempts"], key=lambda p: p["throughput_overhead"])
-    return (f"Full per-request tracing (sample 1:1) costs "
-            f"{o['best_throughput_overhead']:+.1%} throughput at best "
-            f"(p99 delta {best['p99_delta_ms']:+.2f}ms) over "
-            f"{res['n_frames']} frames, absorbing "
-            f"{o['spans_per_s']:.0f} spans/s — bar {res['overhead_bar']:.0%}: "
-            f"{'PASS' if o['pass'] else 'FAIL'}. Live activity gauges vs "
-            f"Tables I/III accumulation goldens: "
-            f"{'EXACT' if s['exact'] else 'DIVERGED'} "
-            f"({s['total']} vs {s['golden_total']}).")
+    out = (f"Full per-request tracing (sample 1:1) plus the live analysis "
+           f"plane (time-series recorder + burn-rate + drift evaluation) "
+           f"costs {o['best_throughput_overhead']:+.1%} throughput at best "
+           f"(p99 delta {best['p99_delta_ms']:+.2f}ms) over "
+           f"{res['n_frames']} frames, absorbing "
+           f"{o['spans_per_s']:.0f} spans/s — bar {res['overhead_bar']:.0%}: "
+           f"{'PASS' if o['pass'] else 'FAIL'}. Live activity gauges vs "
+           f"Tables I/III accumulation goldens: "
+           f"{'EXACT' if s['exact'] else 'DIVERGED'} "
+           f"({s['total']} vs {s['golden_total']}).")
+    d = res.get("alert_pipeline")
+    if d:
+        out += (f" Injected density shift (0.5 -> 0.15): `sparsity_drift` "
+                f"fired after {d['fired_after_samples']} shifted sample(s), "
+                f"resolved after {d['resolved_after_samples']} reverted "
+                f"sample(s) — {'PASS' if d['pass'] else 'FAIL'}.")
+    p = o.get("perfetto")
+    if p:
+        out += (f" Perfetto export: {p['n_events']} trace events, "
+                f"{'schema-valid' if not p['problems'] else 'INVALID'}.")
+    return out
+
+
+def history_md(limit: int = 12) -> str:
+    """Digest of the cumulative BENCH_history.jsonl trajectory log."""
+    path = pathlib.Path("BENCH_history.jsonl")
+    if not path.exists():
+        return ("_no BENCH_history.jsonl yet (benchmarks/run.py appends "
+                "one line per bench invocation)_")
+    records = []
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            records.append(json.loads(line))
+        except json.JSONDecodeError:
+            continue  # a torn append must not kill the report
+    if not records:
+        return "_BENCH_history.jsonl is empty_"
+    by_bench: dict = {}
+    for rec in records:
+        by_bench.setdefault(rec.get("bench", "?"), []).append(rec)
+    lines = [f"{len(records)} recorded invocations across "
+             f"{len(by_bench)} benches (newest last):", ""]
+    for bench in sorted(by_bench):
+        runs = by_bench[bench][-limit:]
+        lines.append(f"- **{bench}** ({len(by_bench[bench])} runs):")
+        for rec in runs:
+            sha = (rec.get("sha") or "")[:12] or "-"
+            metrics = rec.get("metrics", {})
+            shown = ", ".join(
+                f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in sorted(metrics.items())[:6])
+            lines.append(f"  - `{sha}` {shown}")
+    return "\n".join(lines)
 
 
 def streaming_md() -> str:
@@ -201,6 +248,7 @@ def main(argv=None) -> int:
     print("\n## Fixed-point tier\n\n" + fixed_md())
     print("\n## Streaming-kernel roofline\n\n" + streaming_md())
     print("\n## Observability\n\n" + obs_md())
+    print("\n## Bench history\n\n" + history_md())
     if args.write:
         p = pathlib.Path("EXPERIMENTS.md")
         txt = p.read_text()

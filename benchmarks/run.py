@@ -19,12 +19,60 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 import time
 import traceback
 
 OUT = pathlib.Path("experiments/bench")
+HISTORY = pathlib.Path("BENCH_history.jsonl")
+
+#: Per-bench headline extractors for the cumulative history log. Each
+#: maps a module's ``run()`` result to the few scalars whose trajectory
+#: matters; benches without an entry fall back to top-level scalars.
+_HEADLINES = {
+    "fusion_bench": lambda r: {
+        f"{row['backend']}_{m}": row[m]
+        for row in r.get("execution", ())
+        for m in ("layered_fps", "fused_speedup")},
+    "obs_bench": lambda r: {
+        "best_throughput_overhead":
+            r["overhead"]["best_throughput_overhead"],
+        "spans_per_s": r["overhead"]["spans_per_s"],
+        "drift_fired_after":
+            r.get("alert_pipeline", {}).get("fired_after_samples"),
+        "pass": r["pass"]},
+    "serve_bench": lambda r: {
+        "async_fps": r.get("async", {}).get("throughput_fps"),
+        "speedup": r.get("speedup")},
+}
+
+
+def _headline(name: str, res: dict) -> dict:
+    extract = _HEADLINES.get(name)
+    if extract is not None:
+        try:
+            return extract(res)
+        except (KeyError, TypeError):
+            pass  # artifact shape changed: fall through to the generic cut
+    return {k: v for k, v in res.items()
+            if isinstance(v, (int, float, bool, str)) and k != "name"}
+
+
+def append_history(name: str, res: dict, sha: str = "",
+                   path: pathlib.Path = HISTORY) -> dict:
+    """Append one bench invocation's headline to the cumulative log.
+
+    One JSON line per run — the per-bench artifacts are overwritten each
+    run, this file is only ever appended, so the perf *trajectory* stays
+    reconstructable.  ``sha`` is stamped by the caller (``--sha`` or the
+    ``GIT_SHA`` env var): no in-process timestamping or git calls.
+    """
+    record = {"bench": name, "sha": sha, "metrics": _headline(name, res)}
+    with open(path, "a") as f:
+        f.write(json.dumps(record, default=str) + "\n")
+    return record
 
 
 def _modules(quick: bool):
@@ -162,7 +210,13 @@ def main(argv=None) -> int:
                     help="committed artifact the perf gate diffs against")
     ap.add_argument("--tolerance", type=float, default=0.2,
                     help="allowed fractional drop per gated metric")
+    ap.add_argument("--sha", default=None,
+                    help="git SHA to stamp into BENCH_history.jsonl "
+                         "(default: the GIT_SHA env var)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip the BENCH_history.jsonl append")
     args = ap.parse_args(argv)
+    sha = args.sha if args.sha is not None else os.environ.get("GIT_SHA", "")
 
     if args.check_regression:
         return check_regression(pathlib.Path(args.baseline), args.tolerance)
@@ -179,6 +233,8 @@ def main(argv=None) -> int:
             print(mod.format_table(res))
             (OUT / f"{mod.NAME}.json").write_text(
                 json.dumps(res, indent=1, default=str))
+            if not args.no_history:
+                append_history(mod.NAME, res, sha=sha)
             print(f"[{mod.NAME}: {time.perf_counter() - t0:.1f}s]")
         except Exception:
             failures += 1

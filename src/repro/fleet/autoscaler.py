@@ -99,6 +99,11 @@ class Autoscaler:
         self._last: Optional[Dict[str, Any]] = None
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        # alert-driven scale-up pressure (repro.obs.anomaly sinks): while
+        # any named alert is pressing, every tick counts as overloaded —
+        # an SLO burn is a longer-horizon signal than one tick's p99
+        self._pressure_lock = threading.Lock()
+        self._alert_pressure: set = set()
         # structured registry mirror of every control tick: action-labeled
         # tick counter plus the raw signals the decision was made on
         reg = default_registry()
@@ -116,6 +121,21 @@ class Autoscaler:
         self._m_replicas = reg.gauge(
             "repro_autoscale_replicas",
             "Replica count observed at the last tick")
+
+    # -- alert pressure (the obs anomaly/burn-rate sink surface) -------------
+
+    def set_alert_pressure(self, name: str) -> None:
+        """Press scale-up while the named alert fires (idempotent)."""
+        with self._pressure_lock:
+            self._alert_pressure.add(name)
+
+    def clear_alert_pressure(self, name: str) -> None:
+        with self._pressure_lock:
+            self._alert_pressure.discard(name)
+
+    def alert_pressure(self) -> List[str]:
+        with self._pressure_lock:
+            return sorted(self._alert_pressure)
 
     # -- one deterministic control tick -------------------------------------
 
@@ -142,11 +162,14 @@ class Autoscaler:
         depth = int(sig.get("queue_depth", 0))
         n = int(sig.get("n_replicas", 1))
 
+        pressure = self.alert_pressure()
         overloaded = (p99 > self.target_p99_ms or shed_delta > 0
-                      or expired_delta > 0 or util > self.high_utilization)
+                      or expired_delta > 0 or util > self.high_utilization
+                      or bool(pressure))
         idle = (p99 < self.down_ratio * self.target_p99_ms
                 and shed_delta == 0 and expired_delta == 0
-                and util < self.low_utilization and depth <= n)
+                and util < self.low_utilization and depth <= n
+                and not pressure)
         self._breach_ticks = self._breach_ticks + 1 if overloaded else 0
         self._idle_ticks = self._idle_ticks + 1 if idle else 0
 
@@ -164,6 +187,8 @@ class Autoscaler:
                 why.append(f"{expired_delta} expired")
             if util > self.high_utilization:
                 why.append(f"util {util:.2f} > {self.high_utilization}")
+            if pressure:
+                why.append(f"alert pressure: {', '.join(pressure)}")
             added = self.fleet.scale_up()
             if added is not None:
                 action = "scale-up"

@@ -576,7 +576,17 @@ class FleetRouter:
         return {label: merge_stats(parts)
                 for label, parts in by_label.items()}
 
-    # -- shutdown -----------------------------------------------------------
+    # -- readiness / shutdown -----------------------------------------------
+
+    def is_ready(self) -> bool:
+        """True once every live replica has served its first jit step."""
+        reps = self._snapshot()
+        return bool(reps) and all(rep.engine.is_ready() for rep in reps)
+
+    @property
+    def closed(self) -> bool:
+        with self._lock:
+            return not self._replicas and bool(self._retired)
 
     def close(self) -> None:
         """Close every replica; every queued future resolves (or fails)."""

@@ -121,7 +121,28 @@ def main(argv=None) -> int:
     ap.add_argument("--hold-s", type=float, default=0.0,
                     help="keep the metrics endpoint alive this many "
                          "seconds after serving finishes (lets a scraper "
-                         "or CI curl the final state)")
+                         "or CI curl the final state); the engine stays "
+                         "open through the hold so /readyz and /healthz "
+                         "reflect a live serving process")
+    ap.add_argument("--slo", default=None, metavar="SPEC",
+                    help="saocds-amc: comma-separated SLO clauses "
+                         "('default', 'availability=0.999', 'p99_ms=50', "
+                         "'accuracy=0.9'); starts a live time-series "
+                         "recorder + burn-rate engine + drift detectors, "
+                         "served on /timeseries and /alerts")
+    ap.add_argument("--slo-scale", type=float, default=1.0 / 60.0,
+                    help="shrink the Google-SRE burn windows by this "
+                         "factor (default 1/60: the 5m/1h page pair "
+                         "becomes 5s/60s — sized for driver-length runs)")
+    ap.add_argument("--slo-interval-s", type=float, default=0.5,
+                    help="time-series sampling / alert evaluation period")
+    ap.add_argument("--alert-log", default=None, metavar="PATH",
+                    help="append one JSON line per alert fire/resolve "
+                         "transition to PATH")
+    ap.add_argument("--perfetto-dump", default=None, metavar="PATH",
+                    help="saocds-amc: enable request tracing and write the "
+                         "completed spans as Chrome trace-event JSON "
+                         "(loadable in ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
     if args.arch == "saocds-amc":
@@ -142,10 +163,58 @@ def main(argv=None) -> int:
                                            port=args.metrics_port)
             print(f"metrics: http://{metrics_server.host}"
                   f":{metrics_server.port}/metrics")
-        if args.trace_dump:
+        if args.trace_dump or args.perfetto_dump:
             from repro.obs import enable_tracing
 
             enable_tracing(sample_every=max(1, args.trace_sample))
+
+        # the analysis plane: recorder -> burn-rate engine + drift
+        # detectors -> alert manager, sampled on one loop thread; the
+        # process-wide installs make /timeseries and /alerts live
+        import threading as _threading
+
+        obs_stop = _threading.Event()
+        obs_thread = recorder = alert_manager = None
+        if args.slo:
+            from repro.obs import (
+                AlertManager,
+                BurnRateEngine,
+                BurnRateWatcher,
+                SeriesWatcher,
+                TimeSeriesRecorder,
+                log_file_sink,
+                parse_slo_spec,
+                scaled_windows,
+                set_default_alert_manager,
+                set_default_recorder,
+            )
+
+            slos = parse_slo_spec(args.slo)
+            recorder = TimeSeriesRecorder(interval_s=args.slo_interval_s,
+                                          capacity=4096)
+            alert_manager = AlertManager()
+            if args.alert_log:
+                alert_manager.add_sink(log_file_sink(args.alert_log))
+            burn_watcher = BurnRateWatcher(
+                BurnRateEngine(recorder, slos,
+                               windows=scaled_windows(args.slo_scale)),
+                alert_manager)
+            drift_watcher = SeriesWatcher(recorder, alert_manager)
+            set_default_recorder(recorder)
+            set_default_alert_manager(alert_manager)
+
+            def obs_loop() -> None:
+                while not obs_stop.wait(args.slo_interval_s):
+                    recorder.sample()
+                    drift_watcher.step()
+                    burn_watcher.step()
+
+            obs_thread = _threading.Thread(target=obs_loop, daemon=True,
+                                           name="obs-analysis")
+            obs_thread.start()
+            print(f"slo: {', '.join(s.name for s in slos)} "
+                  f"(windows x{args.slo_scale:g}, "
+                  f"sampling {args.slo_interval_s:g}s)")
 
         SNN_CONFIG = CONFIG
         registry = canary_loaded = None
@@ -235,6 +304,19 @@ def main(argv=None) -> int:
             else:
                 engine = AsyncAMCServeEngine(params, SNN_CONFIG,
                                              masks=masks, **engine_kwargs)
+            if metrics_server is not None:
+                from repro.obs import (alert_health_check,
+                                       engine_health_check,
+                                       engine_ready_probe)
+
+                # /readyz gates on the first successful jit step;
+                # /healthz degrades on firing page alerts or engine close
+                metrics_server.add_ready_probe(
+                    "engine", engine_ready_probe(engine))
+                metrics_server.add_health_check(
+                    "alerts", alert_health_check())
+                metrics_server.add_health_check(
+                    "engine", engine_health_check(engine))
             # autotune/per-layer reports exist on a single engine only;
             # a fleet's replicas tune independently behind the router
             if getattr(engine, "autotune", None) is not None:
@@ -298,7 +380,11 @@ def main(argv=None) -> int:
                 print(f"fleet: {fs['n_replicas']} replicas  "
                       f"submitted={fs['n_submitted']} shed={fs['n_shed']} "
                       f"expired={fs['n_expired']}")
-            engine.close()
+            if metrics_server is None or args.hold_s <= 0:
+                # with a held metrics endpoint the engine stays open so
+                # /readyz and /healthz reflect a live serving process;
+                # it closes right before the endpoint does
+                engine.close()
         st = engine.stats
         print(f"requests={st.requests} batches={st.batches} "
               f"backend={st.backend} "
@@ -311,22 +397,38 @@ def main(argv=None) -> int:
               f"fetched_bits={st.fetched_bits}")
         print(f"(untrained net) agreement with labels: "
               f"{float((preds == labels).mean()):.3f}")
-        if args.trace_dump:
+        if args.trace_dump or args.perfetto_dump:
             import json
 
-            from repro.obs import get_tracer
+            from repro.obs import get_tracer, write_perfetto
 
             dump = get_tracer().dump()
-            with open(args.trace_dump, "w") as f:
-                json.dump(dump, f, indent=2)
-            print(f"trace: {dump['n_completed']} of {dump['n_seen']} "
-                  f"requests traced -> {args.trace_dump}")
+            if args.trace_dump:
+                with open(args.trace_dump, "w") as f:
+                    json.dump(dump, f, indent=2)
+                print(f"trace: {dump['n_completed']} of {dump['n_seen']} "
+                      f"requests traced -> {args.trace_dump}")
+            if args.perfetto_dump:
+                doc = write_perfetto(args.perfetto_dump, dump)
+                print(f"perfetto: {len(doc['traceEvents'])} events -> "
+                      f"{args.perfetto_dump} (open in ui.perfetto.dev)")
+        if alert_manager is not None:
+            firing = alert_manager.firing()
+            print(f"alerts: {len(firing)} firing, "
+                  f"{len(alert_manager.history)} total transitions"
+                  + (f" ({', '.join(a.name for a in firing)})"
+                     if firing else ""))
         if metrics_server is not None:
-            # dump is already on disk: a CI killing the hold early still
-            # finds the artifact, and the scrape below sees final totals
+            # dumps are already on disk: a CI killing the hold early still
+            # finds the artifacts, and the scrape below sees final totals
             if args.hold_s > 0:
                 time.sleep(args.hold_s)
+            if args.engine != "sync" and args.hold_s > 0:
+                engine.close()  # was deferred through the hold window
             metrics_server.close()
+        obs_stop.set()
+        if obs_thread is not None:
+            obs_thread.join(timeout=5.0)
         return 0
 
     from repro.models.lm import init_lm

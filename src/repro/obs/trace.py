@@ -101,6 +101,10 @@ class RequestTrace:
         return {
             "request_id": self.request_id,
             "terminal": self.terminal(),
+            # t0 anchors the per-event relative times on the shared
+            # perf_counter axis so dumps stay orderable across requests
+            # (the Perfetto exporter needs this)
+            "t0": t0,
             "events": [{"name": ev.name, "t_rel_s": ev.t - t0, **ev.attrs}
                        for ev in self.events],
             "spans": self.spans(),
@@ -152,9 +156,17 @@ class TraceLog:
         with self._lock:
             return list(self._ring)
 
-    def dump(self) -> Dict[str, Any]:
-        """JSON-ready artifact (the ``--trace-dump`` file)."""
+    def dump(self, limit: Optional[int] = None) -> Dict[str, Any]:
+        """JSON-ready artifact (the ``--trace-dump`` file).
+
+        ``limit`` keeps only the *newest* N traces (the ring is oldest
+        first) — what ``/trace?limit=N`` serves.
+        """
         traces = self.completed()
+        if limit is not None:
+            if limit < 0:
+                raise ValueError(f"limit must be >= 0, got {limit}")
+            traces = traces[len(traces) - limit:] if limit else []
         with self._lock:
             head = {"n_seen": self.n_seen, "n_started": self.n_started,
                     "n_completed": self.n_completed,

@@ -505,10 +505,14 @@ class AsyncAMCServeEngine:
                 int_encode=_uses_fixed(self.assignment or backend))
             self._activity = ActivityObserver(self.plan, engine=self.name)
 
+        # readiness: armed by the first successful jitted step (warmup
+        # counts), what /readyz keys on — distinct from liveness
+        self._ready = threading.Event()
         if warmup:  # pre-compile every bucket shape so serving never stalls
             for b in self.batcher.buckets:
                 jax.block_until_ready(
                     self._step(jnp.zeros((b, ic0, cfg.input_width), jnp.float32)))
+            self._ready.set()
 
         # serving table: label -> BoundVersion.  The primary takes all
         # traffic unless a router is installed (deploy.router); hot-swap
@@ -610,6 +614,7 @@ class AsyncAMCServeEngine:
                     accs = None
                     logits = np.asarray(out)
                 t_step1 = time.perf_counter()
+                self._ready.set()  # first successful jit step: /readyz 200
                 preds = logits.argmax(-1).astype(np.int32)
                 n_real = batch.n_real
                 if accs is not None:
@@ -920,6 +925,14 @@ class AsyncAMCServeEngine:
                 f.cancel()  # no-op for done/running futures
             raise
         return out
+
+    def is_ready(self) -> bool:
+        """True once the first jitted step succeeded (and not closed)."""
+        return self._ready.is_set() and not self._stop.is_set()
+
+    @property
+    def closed(self) -> bool:
+        return self._stop.is_set()
 
     def close(self) -> None:
         """Stop the workers; no future is ever left unresolved.
